@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a batch of prompts, then run the
+decode loop with donated KV caches — the inference-side end-to-end driver
+(works for every arch family: attention KV, MLA compressed cache, mamba /
+rwkv recurrent state).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
+"""
+import argparse
+import subprocess
+import sys
+
+from repro.launch import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=48)
+args = ap.parse_args()
+
+sys.argv = ["serve", "--arch", args.arch, "--reduced",
+            "--batch", str(args.batch), "--prompt-len", "32",
+            "--gen", str(args.gen)]
+serve.main()

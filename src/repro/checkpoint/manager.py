@@ -1,0 +1,132 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/  arrays.npz (flattened pytree)  meta.json
+Writes go to a temp dir + atomic rename, so a preempted save never corrupts
+the latest checkpoint. ``save_async`` moves serialization off the step
+path. On restore, arrays are re-placed under the *current* mesh's
+shardings — a checkpoint taken on 512 devices restores on 8 (elastic
+down-scale) or vice versa, because the on-disk format is topology-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(prefix + [str(k)], v)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(prefix + [f"#{i}"], v)
+        else:
+            flat[SEP.join(prefix)] = node
+
+    rec([], tree)
+    return flat
+
+
+def _unflatten_into(template, flat: dict):
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            return {k: rec(prefix + [str(k)], v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(prefix + [f"#{i}"], v)
+                              for i, v in enumerate(node))
+        key = SEP.join(prefix)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        return flat[key]
+
+    return rec([], template)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save --
+    def _write(self, step: int, host_tree: dict, meta: dict):
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **host_tree)
+            meta = dict(meta, step=step, time=time.time())
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def save(self, step: int, tree, meta: dict | None = None):
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self._write(step, host, meta or {})
+
+    def save_async(self, step: int, tree, meta: dict | None = None):
+        """Device->host copy happens here; file I/O on a background thread."""
+        host = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, meta or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ---------------------------------------------------------- restore --
+    def all_steps(self) -> list:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None) -> tuple:
+        """Restore into the structure of ``template``. If ``shardings`` is
+        given (pytree of NamedSharding matching template), arrays are placed
+        sharded under the *current* mesh — the elastic-rescale path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, meta

@@ -1,0 +1,130 @@
+"""Single-pass partial aggregations (paper §V-B "Partial Aggregations").
+
+GNNBuilder's FPGA kernels aggregate neighbor embeddings in O(1) space with
+one pass over the (sorted) edge stream; variance/std use Welford's online
+algorithm [37]. We implement the identical math twice:
+
+* a *streaming* form (init / update / finalize) — consumed by the Pallas
+  ``gnn_aggregate`` kernel and by the pure-scan reference, and
+* a *segment* form over padded COO edge lists — the XLA-friendly oracle
+  used by the distributed model (jax.ops.segment_* lower to efficient
+  sorted-segment reductions on TPU).
+
+Supported: sum, mean, min, max, var, std (matching the paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+AGGREGATIONS = ("sum", "mean", "min", "max", "var", "std")
+
+
+# ------------------------------------------------------- streaming form --
+def init_state(agg: str, dim: int, dtype=jnp.float32) -> dict:
+    z = jnp.zeros((dim,), dtype)
+    if agg == "sum" or agg == "mean":
+        return {"acc": z, "count": jnp.zeros((), dtype)}
+    if agg == "min":
+        return {"acc": jnp.full((dim,), jnp.inf, dtype)}
+    if agg == "max":
+        return {"acc": jnp.full((dim,), -jnp.inf, dtype)}
+    if agg in ("var", "std"):  # Welford: mean, M2, count
+        return {"mean": z, "m2": z, "count": jnp.zeros((), dtype)}
+    raise ValueError(agg)
+
+
+def update(agg: str, state: dict, x) -> dict:
+    """One neighbor embedding x: (dim,). O(1) space."""
+    if agg in ("sum", "mean"):
+        return {"acc": state["acc"] + x, "count": state["count"] + 1}
+    if agg == "min":
+        return {"acc": jnp.minimum(state["acc"], x)}
+    if agg == "max":
+        return {"acc": jnp.maximum(state["acc"], x)}
+    if agg in ("var", "std"):
+        c = state["count"] + 1
+        delta = x - state["mean"]
+        mean = state["mean"] + delta / c
+        m2 = state["m2"] + delta * (x - mean)
+        return {"mean": mean, "m2": m2, "count": c}
+    raise ValueError(agg)
+
+
+def finalize(agg: str, state: dict):
+    if agg == "sum":
+        return state["acc"]
+    if agg == "mean":
+        return state["acc"] / jnp.maximum(state["count"], 1.0)
+    if agg in ("min", "max"):
+        # isolated nodes: neutral element -> 0 (paper zero-fills)
+        return jnp.where(jnp.isfinite(state["acc"]), state["acc"], 0.0)
+    if agg in ("var", "std"):
+        var = state["m2"] / jnp.maximum(state["count"], 1.0)
+        var = jnp.maximum(var, 1e-12)   # clamp: sqrt'(0) = inf -> NaN grads
+        return jnp.sqrt(var) if agg == "std" else var
+    raise ValueError(agg)
+
+
+def aggregate_stream(agg: str, xs, mask=None):
+    """Reference streaming aggregation over xs: (n, dim) via lax.scan."""
+    n, dim = xs.shape
+    if mask is None:
+        mask = jnp.ones((n,), bool)
+
+    def step(state, inp):
+        x, m = inp
+        new = update(agg, state, x.astype(jnp.float32))
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(m, b, a), state, new)
+        return state, None
+
+    state, _ = jax.lax.scan(step, init_state(agg, dim), (xs, mask))
+    return finalize(agg, state)
+
+
+# --------------------------------------------------------- segment form --
+def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
+                      valid=None):
+    """messages: (E, dim) -> (num_segments, dim). seg_ids: (E,) int32;
+    padded edges carry seg_ids == num_segments (dropped)."""
+    if valid is not None:
+        seg_ids = jnp.where(valid, seg_ids, num_segments)
+    m = messages.astype(jnp.float32)
+    ns = num_segments + 1           # +1 bucket swallows padding
+    if agg == "sum":
+        out = jax.ops.segment_sum(m, seg_ids, ns)
+    elif agg == "mean":
+        s = jax.ops.segment_sum(m, seg_ids, ns)
+        c = jax.ops.segment_sum(jnp.ones_like(m[:, :1]), seg_ids, ns)
+        out = s / jnp.maximum(c, 1.0)
+    elif agg == "min":
+        out = jax.ops.segment_min(m, seg_ids, ns)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    elif agg == "max":
+        out = jax.ops.segment_max(m, seg_ids, ns)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    elif agg in ("var", "std"):
+        s = jax.ops.segment_sum(m, seg_ids, ns)
+        s2 = jax.ops.segment_sum(jnp.square(m), seg_ids, ns)
+        c = jnp.maximum(jax.ops.segment_sum(
+            jnp.ones_like(m[:, :1]), seg_ids, ns), 1.0)
+        mu = s / c
+        var = jnp.maximum(s2 / c - jnp.square(mu), 1e-12)
+        out = jnp.sqrt(var) if agg == "std" else var
+    else:
+        raise ValueError(agg)
+    return out[:num_segments]
+
+
+def degrees(edge_index, num_nodes: int, valid=None):
+    """(in_degree, out_degree) from padded COO (E, 2) with -1 padding."""
+    src, dst = edge_index[:, 0], edge_index[:, 1]
+    if valid is None:
+        valid = src >= 0
+    ones = valid.astype(jnp.float32)
+    indeg = jax.ops.segment_sum(
+        ones, jnp.where(valid, dst, num_nodes), num_nodes + 1)[:num_nodes]
+    outdeg = jax.ops.segment_sum(
+        ones, jnp.where(valid, src, num_nodes), num_nodes + 1)[:num_nodes]
+    return indeg, outdeg

@@ -1,0 +1,160 @@
+"""Message-passing graph convolutions (paper §V-A, Fig. 3).
+
+Every conv follows the explicit gather -> phi -> aggregate -> gamma
+dataflow over padded COO graphs, which is what lets GNNBuilder support
+anisotropic layers (PNA) that SpMM accelerators cannot express.
+
+Kernels: GCN [23], GraphSAGE [24], GIN(E) [26], PNA [27] — the paper's
+Table II set. Each provides ``plan(cfg)`` + ``apply(params, g, x)``, where
+``g`` is a dict {edge_index (E,2), edge_feat (E,Fe), num_nodes, in_deg,
+out_deg, valid_e} with static max shapes (MAX_NODES/MAX_EDGES analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregations as agg_mod
+from repro.nn.layers import act, linear, linear_plan
+from repro.nn.param import ParamSpec
+
+CONV_TYPES = ("gcn", "sage", "gin", "pna")
+PNA_AGGS = ("mean", "min", "max", "std")
+PNA_SCALERS = ("identity", "amplification", "attenuation")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    in_dim: int
+    out_dim: int
+    edge_dim: int = 0
+    conv: str = "gcn"
+    activation: str = "relu"
+    # hardware parallelism factors (paper p_in/p_out -> kernel tile sizes)
+    p_in: int = 1
+    p_out: int = 1
+    delta: float = 1.0        # PNA log-degree normalizer (avg log degree)
+
+
+def _gather(x, idx):
+    return jnp.take(x, jnp.maximum(idx, 0), axis=0)
+
+
+# ------------------------------------------------------------------ GCN --
+def gcn_plan(cfg: ConvConfig, dtype=jnp.float32):
+    return {"w": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                             out_axis="mlp", bias=True, dtype=dtype)}
+
+
+def gcn_apply(params, g, x, cfg: ConvConfig):
+    """x' = W (sum_u x_u / sqrt(d_u d_v)) + b  (self loops included)."""
+    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    n = x.shape[0]
+    deg = g["in_deg"] + 1.0                       # +1 for self loop
+    inv = jax.lax.rsqrt(jnp.maximum(deg, 1e-12))
+    msg = _gather(x * inv[:, None], src)          # phi: normalized gather
+    aggr = agg_mod.segment_aggregate("sum", msg, dst, n, g["valid_e"])
+    aggr = (aggr + x * inv[:, None]) * inv[:, None]   # self loop + norm
+    return linear(params["w"], aggr.astype(x.dtype))  # gamma
+
+
+# ------------------------------------------------------------ GraphSAGE --
+def sage_plan(cfg: ConvConfig, dtype=jnp.float32):
+    return {
+        "w_self": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                              out_axis="mlp", bias=True, dtype=dtype),
+        "w_neigh": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                               out_axis="mlp", dtype=dtype),
+    }
+
+
+def sage_apply(params, g, x, cfg: ConvConfig):
+    """x' = W1 x_v + W2 mean_u(x_u)  (flexible aggregation family)."""
+    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    msg = _gather(x, src)
+    aggr = agg_mod.segment_aggregate("mean", msg, dst, x.shape[0],
+                                     g["valid_e"])
+    return linear(params["w_self"], x) \
+        + linear(params["w_neigh"], aggr.astype(x.dtype))
+
+
+# ------------------------------------------------------------- GIN(E) ---
+def gin_plan(cfg: ConvConfig, dtype=jnp.float32):
+    p = {
+        "eps": ParamSpec((), jnp.float32, (), init="zeros"),
+        "mlp1": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                            out_axis="mlp", bias=True, dtype=dtype),
+        "mlp2": linear_plan(cfg.out_dim, cfg.out_dim, in_axis="mlp",
+                            out_axis="mlp", bias=True, dtype=dtype),
+    }
+    if cfg.edge_dim:
+        p["w_edge"] = linear_plan(cfg.edge_dim, cfg.in_dim, in_axis=None,
+                                  out_axis="embed", dtype=dtype)
+    return p
+
+
+def gin_apply(params, g, x, cfg: ConvConfig):
+    """x' = MLP((1+eps) x_v + sum_u relu(x_u + W_e e_uv)) — edge features
+    make this inexpressible as SpMM (paper Table II)."""
+    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    msg = _gather(x, src)
+    if "w_edge" in params:
+        msg = jax.nn.relu(msg + linear(params["w_edge"], g["edge_feat"]))
+    aggr = agg_mod.segment_aggregate("sum", msg, dst, x.shape[0],
+                                     g["valid_e"])
+    h = (1.0 + params["eps"]) * x + aggr.astype(x.dtype)
+    h = act(cfg.activation)(linear(params["mlp1"], h))
+    return linear(params["mlp2"], h)
+
+
+# ---------------------------------------------------------------- PNA ---
+def pna_plan(cfg: ConvConfig, dtype=jnp.float32):
+    tower_in = cfg.in_dim * len(PNA_AGGS) * len(PNA_SCALERS)
+    p = {
+        "pre": linear_plan(2 * cfg.in_dim + cfg.edge_dim, cfg.in_dim,
+                           in_axis="embed", out_axis="mlp", bias=True,
+                           dtype=dtype),
+        "post": linear_plan(tower_in + cfg.in_dim, cfg.out_dim,
+                            in_axis="embed", out_axis="mlp", bias=True,
+                            dtype=dtype),
+    }
+    return p
+
+
+def pna_apply(params, g, x, cfg: ConvConfig):
+    """Principal Neighbourhood Aggregation: message MLP phi(x_v, x_u, e),
+    4 aggregators x 3 degree scalers, then gamma on [x_v ; towers]."""
+    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    n = x.shape[0]
+    h_src = _gather(x, src)
+    h_dst = _gather(x, dst)
+    feats = [h_dst, h_src]
+    if cfg.edge_dim:
+        feats.append(g["edge_feat"].astype(x.dtype))
+    msg = act(cfg.activation)(
+        linear(params["pre"], jnp.concatenate(feats, axis=-1)))
+    towers = [agg_mod.segment_aggregate(a, msg, dst, n, g["valid_e"])
+              for a in PNA_AGGS]
+    deg = jnp.maximum(g["in_deg"], 1.0)
+    logd = jnp.log(deg + 1.0)[:, None]
+    scaled = []
+    for t in towers:
+        scaled += [t, t * (logd / cfg.delta), t * (cfg.delta / logd)]
+    out = jnp.concatenate([x.astype(jnp.float32)] + scaled, axis=-1)
+    return linear(params["post"], out.astype(x.dtype))
+
+
+PLANS = {"gcn": gcn_plan, "sage": sage_plan, "gin": gin_plan,
+         "pna": pna_plan}
+APPLIES = {"gcn": gcn_apply, "sage": sage_apply, "gin": gin_apply,
+           "pna": pna_apply}
+
+
+def conv_plan(cfg: ConvConfig, dtype=jnp.float32):
+    return PLANS[cfg.conv](cfg, dtype)
+
+
+def conv_apply(params, g, x, cfg: ConvConfig):
+    return APPLIES[cfg.conv](params, g, x, cfg)

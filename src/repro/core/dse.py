@@ -1,0 +1,167 @@
+"""Design space exploration (paper §VII-C, §VIII-A Listing 2).
+
+The design space is the paper's Listing-2 grid: conv type x hidden dims x
+layers x skip x MLP dims x parallelism factors. ``build_database``
+"synthesizes" sampled designs (XLA compile + report — the Vitis analogue),
+``fit_models`` trains the direct-fit RF latency/memory models, and
+``explore`` brute-forces the space through the millisecond-scale models
+under a resource constraint — the paper's seconds-vs-days DSE claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from repro.core import gnn_model as G
+from repro.core import perf_model as PM
+from repro.core.project import Project, TPUTarget
+from repro.data.pipeline import GraphDataConfig
+
+# Listing 2 (paper) design space
+SPACE = {
+    "conv": ["gcn", "gin", "pna", "sage"],
+    "gnn_hidden_dim": [64, 128, 256],
+    "gnn_out_dim": [64, 128, 256],
+    "gnn_layers": [1, 2, 3, 4],
+    "skip": [True, False],
+    "mlp_hidden_dim": [64, 128, 256],
+    "mlp_layers": [1, 2, 3, 4],
+    "gnn_p_in": [1],
+    "gnn_p_hidden": [2, 4, 8],
+    "gnn_p_out": [2, 4, 8],
+    "mlp_p_in": [2, 4, 8],
+    "mlp_p_hidden": [2, 4, 8],
+    "mlp_p_out": [1],
+}
+
+
+def space_size() -> int:
+    n = 1
+    for v in SPACE.values():
+        n *= len(v)
+    return n
+
+
+def sample_design(rng, *, in_dim: int = 9, edge_dim: int = 3,
+                  avg_nodes: float = 18, avg_edges: float = 38,
+                  avg_degree: float = 2.1, out_dim: int = 1) -> dict:
+    d = {k: v[rng.integers(0, len(v))] for k, v in SPACE.items()}
+    d.update(in_dim=in_dim, edge_dim=edge_dim, avg_nodes=avg_nodes,
+             avg_edges=avg_edges, avg_degree=avg_degree, out_dim=out_dim,
+             fpx_bits=32)
+    return d
+
+
+def design_to_config(d: dict) -> G.GNNModelConfig:
+    pooled = d["gnn_out_dim"] * 3
+    return G.GNNModelConfig(
+        graph_input_feature_dim=d["in_dim"],
+        graph_input_edge_dim=d["edge_dim"],
+        gnn_hidden_dim=d["gnn_hidden_dim"],
+        gnn_num_layers=d["gnn_layers"],
+        gnn_output_dim=d["gnn_out_dim"],
+        gnn_conv=d["conv"],
+        gnn_skip_connection=d["skip"],
+        global_pooling=("add", "mean", "max"),
+        mlp_head=G.MLPConfig(in_dim=pooled, out_dim=d["out_dim"],
+                             hidden_dim=d["mlp_hidden_dim"],
+                             hidden_layers=d["mlp_layers"],
+                             p_in=d["mlp_p_in"],
+                             p_hidden=d["mlp_p_hidden"],
+                             p_out=d["mlp_p_out"]),
+        gnn_p_in=d["gnn_p_in"], gnn_p_hidden=d["gnn_p_hidden"],
+        gnn_p_out=d["gnn_p_out"],
+        pna_delta=float(np.log(d["avg_degree"] + 1.0)))
+
+
+def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
+                      max_edges: int = 600, run_testbench: bool = False,
+                      tb_graphs: int = 12) -> dict:
+    """One 'synthesis run': compile + report (+ optional measured runtime)."""
+    cfg = design_to_config(d)
+    proj = Project(
+        f"dse_{abs(hash(tuple(sorted(d.items())))) % 10**8}", cfg, "dse",
+        build_dir,
+        dataset_cfg=GraphDataConfig(node_feat_dim=d["in_dim"],
+                                    edge_feat_dim=d["edge_dim"],
+                                    max_nodes=max_nodes,
+                                    max_edges=max_edges),
+        max_nodes=max_nodes, max_edges=max_edges,
+        num_nodes_guess=d["avg_nodes"], num_edges_guess=d["avg_edges"],
+        degree_guess=d["avg_degree"])
+    proj.gen_hw_model()
+    report = proj.run_synthesis()
+    out = dict(d)
+    out["latency_s"] = report["latency_s"]
+    out["hbm_bytes"] = report["hbm_total_bytes"]
+    out["flops"] = report["flops"]
+    out["compile_s"] = report["compile_s"]
+    if run_testbench:
+        proj.init_params()
+        proj.gen_testbench(tb_graphs)
+        tb = proj.build_and_run_testbench()
+        out["measured_ms"] = tb["mean_runtime_ms"]
+    return out
+
+
+def build_database(n: int, build_dir: str, seed: int = 0,
+                   run_testbench: bool = False, log=print) -> list:
+    rng = np.random.default_rng(seed)
+    db = []
+    for i in range(n):
+        d = sample_design(rng)
+        t0 = time.time()
+        rec = synthesize_design(d, build_dir, run_testbench=run_testbench)
+        db.append(rec)
+        if log and (i + 1) % 20 == 0:
+            log(f"  synthesized {i + 1}/{n} designs "
+                f"({time.time() - t0:.1f}s/design)")
+    return db
+
+
+@dataclasses.dataclass
+class FittedModels:
+    latency: PM.RandomForestRegressor
+    memory: PM.RandomForestRegressor
+
+    def predict(self, designs: list) -> tuple:
+        x = np.stack([PM.features(d) for d in designs])
+        return self.latency.predict(x), self.memory.predict(x)
+
+
+def fit_models(db: list, latency_key: str = "latency_s",
+               memory_key: str = "hbm_bytes") -> FittedModels:
+    x = np.stack([PM.features(d) for d in db])
+    lat = PM.RandomForestRegressor().fit(
+        x, np.array([d[latency_key] for d in db]))
+    mem = PM.RandomForestRegressor().fit(
+        x, np.array([d[memory_key] for d in db]))
+    return FittedModels(lat, mem)
+
+
+def explore(models: FittedModels, n_candidates: int = 4096, seed: int = 1,
+            memory_budget: float = TPUTarget().hbm_bytes,
+            base: dict | None = None) -> dict:
+    """Random-sample the space, predict in milliseconds, return the best
+    latency design under the memory constraint (paper DSE loop)."""
+    rng = np.random.default_rng(seed)
+    cands = []
+    for _ in range(n_candidates):
+        d = sample_design(rng, **(base or {}))
+        cands.append(d)
+    t0 = time.time()
+    lat, mem = models.predict(cands)
+    elapsed = time.time() - t0
+    order = np.argsort(lat)
+    for i in order:
+        if mem[i] <= memory_budget:
+            best = dict(cands[i])
+            best["pred_latency_s"] = float(lat[i])
+            best["pred_hbm_bytes"] = float(mem[i])
+            best["dse_seconds"] = elapsed
+            best["ms_per_eval"] = elapsed / n_candidates * 1e3
+            return best
+    raise RuntimeError("no design fits the memory budget")

@@ -1,0 +1,171 @@
+"""GNNModel — the paper's parameterized model architecture (§IV, Fig. 2).
+
+GNN backbone (conv layers + activation + optional skip connections) ->
+global pooling (concat of sum/mean/max) -> MLP prediction head. Node- and
+graph-level tasks; node and edge input features; arbitrary activation;
+per-layer parallelism factors (gnn_p_in/hidden/out, mlp p_in/hidden/out)
+which map to kernel tile sizes on TPU.
+
+The paper's Listing-1 API shape is preserved: a single config object the
+user trains against (here: init/apply over padded graphs), handed to
+``core.project.Project`` for accelerator generation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import convs as C
+from repro.core import quantization as Q
+from repro.core.pooling import global_pooling
+from repro.nn.layers import act, linear, linear_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int
+    out_dim: int
+    hidden_dim: int = 64
+    hidden_layers: int = 2
+    activation: str = "relu"
+    p_in: int = 1
+    p_hidden: int = 1
+    p_out: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNModelConfig:
+    """Mirrors gnnb.GNNModel(...) keyword-for-keyword where sensible."""
+    graph_input_feature_dim: int
+    graph_input_edge_dim: int = 0
+    gnn_hidden_dim: int = 64
+    gnn_num_layers: int = 2
+    gnn_output_dim: int = 64
+    gnn_conv: str = "gcn"                    # gcn | sage | gin | pna
+    gnn_activation: str = "relu"
+    gnn_skip_connection: bool = True
+    global_pooling: tuple = ("add", "mean", "max")
+    mlp_head: MLPConfig | None = None
+    output_activation: str | None = None
+    task: str = "graph"                      # graph | node
+    gnn_p_in: int = 1
+    gnn_p_hidden: int = 8
+    gnn_p_out: int = 4
+    pna_delta: float = 1.0
+
+    def conv_cfg(self, layer: int) -> C.ConvConfig:
+        ind = self.graph_input_feature_dim if layer == 0 \
+            else self.gnn_hidden_dim
+        outd = self.gnn_output_dim if layer == self.gnn_num_layers - 1 \
+            else self.gnn_hidden_dim
+        p_in = self.gnn_p_in if layer == 0 else self.gnn_p_hidden
+        p_out = self.gnn_p_out if layer == self.gnn_num_layers - 1 \
+            else self.gnn_p_hidden
+        return C.ConvConfig(in_dim=ind, out_dim=outd,
+                            edge_dim=self.graph_input_edge_dim,
+                            conv=self.gnn_conv,
+                            activation=self.gnn_activation,
+                            p_in=p_in, p_out=p_out, delta=self.pna_delta)
+
+    @property
+    def pooled_dim(self) -> int:
+        return self.gnn_output_dim * len(self.global_pooling)
+
+
+def mlp_head_plan(cfg: MLPConfig, dtype=jnp.float32):
+    dims = [cfg.in_dim] + [cfg.hidden_dim] * cfg.hidden_layers \
+        + [cfg.out_dim]
+    return {f"l{i}": linear_plan(dims[i], dims[i + 1], in_axis=None,
+                                 out_axis=None, bias=True, dtype=dtype)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_head_apply(params, x, cfg: MLPConfig, quant: Q.FPX | None = None):
+    n = cfg.hidden_layers + 1
+    for i in range(n):
+        x = linear(params[f"l{i}"], x)
+        if quant is not None:
+            x = Q.quantize(x, quant)
+        if i < n - 1:
+            x = act(cfg.activation)(x)
+    return x
+
+
+def model_plan(cfg: GNNModelConfig, dtype=jnp.float32):
+    plan = {"convs": {f"c{i}": C.conv_plan(cfg.conv_cfg(i), dtype)
+                      for i in range(cfg.gnn_num_layers)}}
+    if cfg.gnn_skip_connection:
+        # project skip when dims change (layer0 and final layer)
+        for i in range(cfg.gnn_num_layers):
+            cc = cfg.conv_cfg(i)
+            if cc.in_dim != cc.out_dim:
+                plan[f"skip{i}"] = linear_plan(cc.in_dim, cc.out_dim,
+                                               in_axis=None, out_axis=None,
+                                               dtype=dtype)
+    if cfg.task == "graph":
+        plan["mlp"] = mlp_head_plan(cfg.mlp_head, dtype)
+    return plan
+
+
+def graph_inputs(batch_el: dict) -> tuple:
+    """Unpack one padded graph {node_feat, edge_index, edge_feat,
+    num_nodes, num_edges, y} into (g, x, node_mask)."""
+    x = batch_el["node_feat"]
+    n_max = x.shape[0]
+    num_nodes = batch_el["num_nodes"]
+    edge_index = batch_el["edge_index"]
+    valid_e = edge_index[:, 0] >= 0
+    node_mask = jnp.arange(n_max) < num_nodes
+    from repro.core.aggregations import degrees
+    indeg, outdeg = degrees(edge_index, n_max, valid_e)
+    g = {"edge_index": edge_index, "edge_feat": batch_el.get("edge_feat"),
+         "valid_e": valid_e, "in_deg": indeg, "out_deg": outdeg,
+         "num_nodes": num_nodes}
+    return g, x, node_mask
+
+
+def apply(params, cfg: GNNModelConfig, batch_el: dict,
+          quant: Q.FPX | None = None):
+    """Forward one padded graph. quant != None reproduces the fixed-point
+    testbench semantics (weights are pre-quantized by the caller)."""
+    g, x, node_mask = graph_inputs(batch_el)
+    if quant is not None:
+        x = Q.quantize(x, quant)
+    for i in range(cfg.gnn_num_layers):
+        cc = cfg.conv_cfg(i)
+        h = C.conv_apply(params["convs"][f"c{i}"], g, x, cc)
+        if quant is not None:
+            h = Q.quantize(h, quant)
+        if cfg.gnn_skip_connection:
+            skip = x
+            if f"skip{i}" in params:
+                skip = linear(params[f"skip{i}"], x)
+            h = h + skip
+        x = act(cfg.gnn_activation)(h)
+        x = x * node_mask[:, None]
+        if quant is not None:
+            x = Q.quantize(x, quant)
+    if cfg.task == "node":
+        return x
+    pooled = global_pooling(cfg.global_pooling, x, node_mask)
+    if quant is not None:
+        pooled = Q.quantize(pooled, quant)
+    out = mlp_head_apply(params["mlp"], pooled.astype(x.dtype),
+                         cfg.mlp_head, quant)
+    if cfg.output_activation:
+        out = act(cfg.output_activation)(out)
+    return out
+
+
+def apply_batch(params, cfg: GNNModelConfig, batch: dict,
+                quant: Q.FPX | None = None):
+    """vmapped batched forward over stacked padded graphs."""
+    return jax.vmap(lambda el: apply(params, cfg, el, quant))(
+        {k: v for k, v in batch.items() if k != "y"})
+
+
+def mse_loss(params, cfg: GNNModelConfig, batch: dict):
+    pred = apply_batch(params, cfg, batch)
+    return jnp.mean(jnp.square(pred - batch["y"]))

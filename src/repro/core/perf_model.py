@@ -1,0 +1,174 @@
+"""Direct-fit hardware performance models (paper §VII-B, Fig. 4).
+
+Random-forest regressors (implemented in NumPy — no sklearn available)
+fitted on a database of synthesized design points, predicting latency and
+memory ("BRAM" analogue) from the configuration feature vector. The paper
+uses 10-estimator forests over 400 sampled designs with 5-fold CV MAPE;
+we reproduce the exact protocol against XLA-compiled design points.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.convs import CONV_TYPES
+
+
+# -------------------------------------------------------- decision tree --
+class _Node:
+    __slots__ = ("feat", "thresh", "left", "right", "value")
+
+    def __init__(self, value=None):
+        self.feat = -1
+        self.thresh = 0.0
+        self.left = None
+        self.right = None
+        self.value = value
+
+
+class DecisionTreeRegressor:
+    """CART with variance-reduction splits."""
+
+    def __init__(self, max_depth: int = 12, min_samples_leaf: int = 2,
+                 max_features: float | None = None, rng=None):
+        self.max_depth = max_depth
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.rng = rng or np.random.default_rng(0)
+        self.root = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        self.root = self._build(np.asarray(x, float), np.asarray(y, float),
+                                0)
+        return self
+
+    def _best_split(self, x, y):
+        n, d = x.shape
+        feats = np.arange(d)
+        if self.max_features:
+            k = max(1, int(d * self.max_features))
+            feats = self.rng.choice(d, size=k, replace=False)
+        best = (None, None, np.inf)
+        for f in feats:
+            order = np.argsort(x[:, f], kind="stable")
+            xs, ys = x[order, f], y[order]
+            csum = np.cumsum(ys)
+            csq = np.cumsum(ys * ys)
+            total, total_sq = csum[-1], csq[-1]
+            ml = self.min_samples_leaf
+            for i in range(ml, n - ml + 1):
+                if xs[i - 1] == xs[min(i, n - 1)]:
+                    continue
+                sl, sl2 = csum[i - 1], csq[i - 1]
+                nl, nr = i, n - i
+                sse = (sl2 - sl * sl / nl) \
+                    + ((total_sq - sl2) - (total - sl) ** 2 / nr)
+                if sse < best[2]:
+                    best = (f, (xs[i - 1] + xs[min(i, n - 1)]) / 2, sse)
+        return best
+
+    def _build(self, x, y, depth):
+        if depth >= self.max_depth or len(y) < 2 * self.min_samples_leaf \
+                or np.all(y == y[0]):
+            return _Node(value=float(np.mean(y)))
+        f, t, _ = self._best_split(x, y)
+        if f is None:
+            return _Node(value=float(np.mean(y)))
+        mask = x[:, f] <= t
+        if mask.all() or not mask.any():
+            return _Node(value=float(np.mean(y)))
+        node = _Node()
+        node.feat, node.thresh = int(f), float(t)
+        node.left = self._build(x[mask], y[mask], depth + 1)
+        node.right = self._build(x[~mask], y[~mask], depth + 1)
+        return node
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        x = np.asarray(x, float)
+        out = np.empty(len(x))
+        for i, row in enumerate(x):
+            node = self.root
+            while node.value is None:
+                node = node.left if row[node.feat] <= node.thresh \
+                    else node.right
+            out[i] = node.value
+        return out
+
+
+class RandomForestRegressor:
+    """Bootstrap ensemble of CARTs (paper: 10 estimators)."""
+
+    def __init__(self, n_estimators: int = 10, max_depth: int = 12,
+                 min_samples_leaf: int = 2, max_features: float = 0.8,
+                 seed: int = 0):
+        self.n_estimators = n_estimators
+        self.kw = dict(max_depth=max_depth,
+                       min_samples_leaf=min_samples_leaf,
+                       max_features=max_features)
+        self.seed = seed
+        self.trees: list = []
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        x, y = np.asarray(x, float), np.asarray(y, float)
+        rng = np.random.default_rng(self.seed)
+        self.trees = []
+        for i in range(self.n_estimators):
+            idx = rng.integers(0, len(y), size=len(y))
+            t = DecisionTreeRegressor(
+                rng=np.random.default_rng(self.seed + 1000 + i), **self.kw)
+            t.fit(x[idx], y[idx])
+            self.trees.append(t)
+        return self
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return np.mean([t.predict(x) for t in self.trees], axis=0)
+
+
+# -------------------------------------------------------------- metrics --
+def mape(y_true, y_pred) -> float:
+    y_true, y_pred = np.asarray(y_true, float), np.asarray(y_pred, float)
+    denom = np.maximum(np.abs(y_true), 1e-12)
+    return float(np.mean(np.abs(y_true - y_pred) / denom) * 100.0)
+
+
+def kfold_cv_mape(x, y, k: int = 5, seed: int = 0, **forest_kw) -> float:
+    """Paper protocol: 5-fold CV, averaged test MAPE."""
+    x, y = np.asarray(x, float), np.asarray(y, float)
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(y))
+    folds = np.array_split(idx, k)
+    scores = []
+    for i in range(k):
+        test = folds[i]
+        train = np.concatenate([folds[j] for j in range(k) if j != i])
+        model = RandomForestRegressor(seed=seed + i, **forest_kw)
+        model.fit(x[train], y[train])
+        scores.append(mape(y[test], model.predict(x[test])))
+    return float(np.mean(scores))
+
+
+# ------------------------------------------------------------- features --
+FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
+    "gnn_hidden_dim", "gnn_out_dim", "gnn_layers", "skip",
+    "mlp_hidden_dim", "mlp_layers",
+    "gnn_p_in", "gnn_p_hidden", "gnn_p_out",
+    "mlp_p_in", "mlp_p_hidden", "mlp_p_out",
+    "in_dim", "edge_dim", "avg_nodes", "avg_edges", "avg_degree",
+    "fpx_bits",
+]
+
+
+def features(design: dict) -> np.ndarray:
+    """Design-point dict (see dse.sample_design) -> feature vector."""
+    onehot = [1.0 if design["conv"] == c else 0.0 for c in CONV_TYPES]
+    return np.array(onehot + [
+        design["gnn_hidden_dim"], design["gnn_out_dim"],
+        design["gnn_layers"], float(design["skip"]),
+        design["mlp_hidden_dim"], design["mlp_layers"],
+        design["gnn_p_in"], design["gnn_p_hidden"], design["gnn_p_out"],
+        design["mlp_p_in"], design["mlp_p_hidden"], design["mlp_p_out"],
+        design["in_dim"], design["edge_dim"],
+        design["avg_nodes"], design["avg_edges"], design["avg_degree"],
+        design.get("fpx_bits", 32),
+    ], dtype=float)

@@ -1,0 +1,28 @@
+"""Global graph pooling (paper §V-B): sum / mean / max over valid nodes,
+multiple methods combined by concatenation (GlobalPooling(["add","mean",
+"max"]) in the paper's API)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+POOLINGS = ("add", "sum", "mean", "max")
+
+
+def global_pool(kind: str, x, node_mask):
+    """x: (N, F); node_mask: (N,) bool -> (F,)."""
+    m = node_mask[:, None].astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    if kind in ("add", "sum"):
+        return (xf * m).sum(0)
+    if kind == "mean":
+        return (xf * m).sum(0) / jnp.maximum(m.sum(), 1.0)
+    if kind == "max":
+        neg = jnp.where(node_mask[:, None], xf, -jnp.inf)
+        out = neg.max(0)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(kind)
+
+
+def global_pooling(kinds, x, node_mask):
+    """Concatenation of pooling methods -> (len(kinds) * F,)."""
+    return jnp.concatenate([global_pool(k, x, node_mask) for k in kinds])

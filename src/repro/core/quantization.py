@@ -1,0 +1,56 @@
+"""Fixed-point quantization emulation (paper's FPX(W, I) = ap_fixed<W,I>).
+
+``FPX(32, 16)`` means 32 total bits with 16 integer bits (signed), i.e.
+16 fractional bits: values quantize to round(x * 2^F) / 2^F clipped to
+[-2^(I-1), 2^(I-1) - 2^-F]. The testbench casts weights + activations
+through this grid to reproduce the paper's "true quantization simulation";
+a per-layer hook inserts activation quantization after every conv/linear.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FPX:
+    w: int = 32          # total bits
+    i: int = 16          # integer bits (including sign)
+
+    @property
+    def frac_bits(self) -> int:
+        return self.w - self.i
+
+    @property
+    def min_val(self) -> float:
+        return -(2.0 ** (self.i - 1))
+
+    @property
+    def max_val(self) -> float:
+        return 2.0 ** (self.i - 1) - 2.0 ** (-self.frac_bits)
+
+    @property
+    def resolution(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    def __str__(self):
+        return f"fpx<{self.w},{self.i}>"
+
+
+def quantize(x, fpx: FPX):
+    """Round-to-nearest onto the fixed-point grid, saturating."""
+    scale = 2.0 ** fpx.frac_bits
+    q = jnp.round(x.astype(jnp.float32) * scale) / scale
+    return jnp.clip(q, fpx.min_val, fpx.max_val)
+
+
+def quantize_tree(tree, fpx: FPX):
+    return jax.tree_util.tree_map(
+        lambda a: quantize(a, fpx) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def quant_error(x, fpx: FPX):
+    return jnp.abs(quantize(x, fpx) - x.astype(jnp.float32))

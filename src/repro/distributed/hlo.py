@@ -1,0 +1,237 @@
+"""HLO-text analysis: collective byte accounting for the roofline.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (post-SPMD, per-device) HLO module and sum the operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Shapes in the per-device program are shard-local, so
+the totals are bytes-through-ICI *per chip*. Collectives inside scan
+(`while`) bodies are multiplied by the loop trip count, with nesting
+handled by propagating scales along the while-call graph.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?)\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum bytes over every dtype[dims] shape token in ``text``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """computation name -> list of body lines."""
+    comps: dict = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and "->" in s:
+            toks = s.split()
+            first = toks[1] if toks[0] == "ENTRY" else toks[0]
+            cur = first.strip("%")
+            comps[cur] = []
+        elif s == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _while_edges(comps: dict) -> list:
+    """(enclosing_comp, body_comp, trip_count) for each while op."""
+    edges = []
+    for name, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+            if mb:
+                edges.append((name, mb.group(1),
+                              int(mt.group(1)) if mt else 1))
+    return edges
+
+
+def _comp_scales(comps: dict) -> dict:
+    """Effective execution multiplier per computation (nested whiles)."""
+    scales = defaultdict(lambda: 1)
+    edges = _while_edges(comps)
+    # propagate: body scale = trip * enclosing scale; iterate to fixpoint
+    for _ in range(8):
+        changed = False
+        for parent, body, trip in edges:
+            s = scales[parent] * trip
+            if scales[body] != s:
+                scales[body] = s
+                changed = True
+        if not changed:
+            break
+    return scales
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:                      # iota format [num_groups, group_size]<=[N]
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x])
+    return 2
+
+
+def _line_collective(line: str):
+    """Per-chip ICI bytes for one collective, from its RESULT shape
+    (post-opt HLO prints operands bare). Ring-algorithm accounting:
+      all-gather   : chip receives ~result bytes        -> R
+      all-reduce   : reduce-scatter + all-gather        -> 2R
+      reduce-scatter: sends (g-1)/g of the g*R operand  -> R*(g-1)
+      all-to-all   : exchanges ~its shard               -> R
+      collective-permute: one shard hop                 -> R
+
+    Returns (op, raw_bytes, tpu_bytes). ``tpu_bytes`` corrects two
+    XLA:CPU-pipeline artifacts that the TPU pipeline does not have
+    (verified on a minimal FSDP matmul, see EXPERIMENTS.md §Dry-run):
+      * CPU float-support upcasts bf16 dots to f32, so weight/grad
+        collectives appear at 2x width -> halve f32 collective bytes
+        (model wire dtype is bf16 by design; genuinely-f32 traffic such
+        as scalar losses is negligible).
+      * CPU lacks the all-reduce->reduce-scatter rewrite for gradient
+        syncs whose consumers are sharded -> count gradient ARs
+        (op_name contains "transpose(jvp") at RS volume (1R not 2R).
+    """
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    op = m.group(2).replace("-start", "").replace("-done", "")
+    if "-done" in m.group(2):
+        return None            # counted at -start
+    r = shape_bytes(m.group(1))
+    g = _group_size(line)
+    if op == "all-reduce":
+        b = 2 * r
+    elif op == "reduce-scatter":
+        b = r * max(g - 1, 1)
+    else:
+        b = r
+    tpu = b
+    is_grad = "transpose(jvp" in line
+    if op == "all-reduce" and is_grad:
+        tpu = r                          # RS volume
+    if re.search(r"=\s*\(?f32\[", line) or " (f32[" in line:
+        tpu //= 2                        # bf16 on the wire on TPU
+    return op, b, tpu
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])")
+_DOT_RE = re.compile(
+    r"%([\w\.\-]+)\s*=\s*([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+dot\("
+    r"%([\w\.\-]+),\s*%([\w\.\-]+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dims(shape_tok: str) -> list:
+    m = _SHAPE_RE.search(shape_tok)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def dot_stats(hlo_text: str) -> dict:
+    """True per-chip HLO matmul FLOPs/bytes, scaled by while trip counts.
+
+    ``cost_analysis()`` counts each scan body once; here each ``dot`` op
+    contributes 2 * prod(result_dims) * prod(contracting_dims) FLOPs
+    (contracting sizes resolved via the operand-name -> shape map) times
+    its computation's execution multiplier. ``bytes`` sums dot operand +
+    result bytes (a matmul-traffic estimate of HBM bytes; elementwise is
+    excluded and noted in the roofline).
+    """
+    comps = _split_computations(hlo_text)
+    scales = _comp_scales(comps)
+    shapes: dict = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    flops = 0
+    bytes_ = 0
+    n_dots = 0
+    for name, lines in comps.items():
+        scale = scales.get(name, 1)
+        for line in lines:
+            m = _DOT_RE.search(line)
+            if not m:
+                continue
+            res, lhs, rhs = m.group(2), m.group(3), m.group(4)
+            res_dims = _dims(res)
+            lhs_shape = shapes.get(lhs)
+            mc = _LHS_C_RE.search(line)
+            contract = 1
+            if lhs_shape and mc:
+                ld = _dims(lhs_shape)
+                for d in mc.group(1).split(","):
+                    if d:
+                        contract *= ld[int(d)]
+            n = 1
+            for d in res_dims:
+                n *= d
+            flops += 2 * n * contract * scale
+            b = shape_bytes(res)
+            for opnd in (lhs, rhs):
+                if opnd in shapes:
+                    b += shape_bytes(shapes[opnd])
+            bytes_ += b * scale
+            n_dots += scale
+    return {"flops": flops, "bytes": bytes_, "count": n_dots}
+
+
+def collective_stats(hlo_text: str, scale_by_trip_count: bool = True) -> dict:
+    """Per-collective {bytes, tpu_bytes, count} totals (per-chip ICI)."""
+    comps = _split_computations(hlo_text)
+    scales = _comp_scales(comps) if scale_by_trip_count else {}
+    stats = {c: {"bytes": 0, "tpu_bytes": 0, "count": 0}
+             for c in COLLECTIVES}
+    for name, lines in comps.items():
+        scale = scales.get(name, 1) if scale_by_trip_count else 1
+        for line in lines:
+            got = _line_collective(line)
+            if got is None:
+                continue
+            op, b, tpu = got
+            stats[op]["bytes"] += b * scale
+            stats[op]["tpu_bytes"] += tpu * scale
+            stats[op]["count"] += scale
+    stats["total_bytes"] = sum(v["bytes"] for v in stats.values()
+                               if isinstance(v, dict))
+    stats["tpu_total_bytes"] = sum(v["tpu_bytes"] for v in stats.values()
+                                   if isinstance(v, dict))
+    stats["total_count"] = sum(v["count"] for v in stats.values()
+                               if isinstance(v, dict))
+    return stats

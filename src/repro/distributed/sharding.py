@@ -1,0 +1,192 @@
+"""Logical-axis -> mesh-axis sharding rules (GSPMD partition specs).
+
+The rules table is the TPU analogue of GNNBuilder's parallelism factors:
+swapping a rule re-parallelizes the generated program without touching the
+model definition. ``spec_for`` drops mesh axes that do not divide a dim
+(e.g. 8 KV heads on a 16-way model axis) instead of failing — the fallback
+is replication, exactly like setting a parallelism factor to 1.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn import param as P_
+
+# Default logical->mesh rules. Values may be a mesh axis name, a tuple of
+# mesh axis names (sharded over their product), or None (replicated).
+# "fsdp+tp": weight `embed` dims shard over `data` (GSPMD inserts the
+# per-layer all-gather = FSDP). Activations constrain `batch` first, so
+# their embed dim stays replicated (the `used` set drops the double-use).
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "heads": ("model",),
+    "kv_flat": ("model",),        # flattened kv projection out-dim
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "embed": ("data",),           # FSDP axis for weights
+    "experts": ("model",),        # EP
+    "moe_f": ("data",),           # expert ffn inner dim (2D expert shard)
+    "kv_seq": ("model",),         # decode KV caches shard sequence on model
+    "long_seq": ("data", "model"),  # 500k-context: shard seq over everything
+    "seq": (),
+    # residual-stream sequence sharding (Megatron-SP): activations between
+    # blocks shard their seq dim on `model`; GSPMD inserts the all-gather
+    # before attention/mlp and the reduce-scatter after. Keeps scan-saved
+    # residuals (the remat working set) 16x smaller.
+    "act_seq": ("model",),
+    # seq sharding *inside* mixers/ffns: () = gather the sequence at the
+    # block boundary (SP+TP); ("model",) = keep tokens sharded through the
+    # matmuls and gather weights instead (context-parallel FSDP — the
+    # fsdp_seq preset).
+    "mixer_seq": (),
+    "layers": (),
+    "state": ("model",),          # ssm/rwkv inner state channels
+    "conv": (),
+    "q_lora": (),
+    "kv_lora": (),
+}
+
+# Pure tensor-parallel preset (weights replicated over `data`) — a DSE /
+# hillclimb alternative for small models and latency-critical decode.
+TP_ONLY_RULES: dict = {**DEFAULT_RULES, "embed": (), "moe_f": ()}
+
+# Pure FSDP preset: batch shards over EVERY mesh axis (1 seq/device at
+# train_4k), weights shard over `data` and are gathered per layer. No
+# activation collectives at all — for dense training at >=4k tokens/device
+# the weight-gather traffic (~params bytes x3) is ~15x cheaper than the
+# SP/TP activation traffic. Napkin math and measurements: EXPERIMENTS §Perf.
+FSDP_RULES: dict = {
+    **DEFAULT_RULES,
+    "batch": ("pod", "data", "model"),
+    # weights shard 2D over (data, model): gathers stream over both axes
+    # and gradients reduce-scatter instead of all-reducing over a
+    # replicated model axis.
+    "embed": ("data", "model"),
+    "act_seq": (), "heads": (), "kv_flat": (), "mlp": (), "state": (),
+    "moe_f": ("model",),   # MoE under fsdp: experts x inner-dim 2D
+}
+
+# Context-parallel FSDP: tokens stay sequence-sharded through every
+# matmul (zero activation collectives); weights are 2D-sharded and
+# gathered per layer; KV replicates per layer for attention (128 MB vs
+# the 0.5-1 GB activation gathers it replaces). Best for long-sequence
+# prefill of attention archs; NOT for ssm/hybrid (sequential mixers).
+FSDP_SEQ_RULES: dict = {
+    **DEFAULT_RULES,
+    # weights shard over `data` only: a model-axis weight shard would make
+    # GSPMD gather the (much larger) seq-sharded activations at each
+    # matmul instead of the weights (measured: +19 GB/step on qwen3).
+    "embed": ("data",),
+    "mixer_seq": ("model",),
+    "heads": (), "kv_flat": (), "mlp": (), "vocab": ("model",),
+}
+
+# fsdp_tp without sequence-parallel residuals: no boundary gathers at all
+# (TP psums remain). Only viable when scan-carry memory is small — i.e.
+# few scan iterations x high grad_accum (jamba: 9 superblocks, accum 8).
+FSDP_TP_NOSP_RULES: dict = {**DEFAULT_RULES, "act_seq": ()}
+
+RULE_PRESETS = {"fsdp_tp": DEFAULT_RULES, "tp_only": TP_ONLY_RULES,
+                "fsdp": FSDP_RULES, "fsdp_seq": FSDP_SEQ_RULES,
+                "fsdp_tp_nosp": FSDP_TP_NOSP_RULES}
+
+
+def auto_preset(cfg, kind: str, multi_pod: bool) -> str:
+    """Launcher default: best-known preset per (family x step-kind x mesh),
+    from the measured §Perf iterations (EXPERIMENTS.md):
+      * dense-family single-pod train: batch=256 over all 256 chips ->
+        pure FSDP (no activation collectives; ~15x less traffic than SP+TP)
+      * hybrid train: TP without SP — 9 superblocks x accum 8 keep scan
+        carries small, dropping all boundary gathers (-31% measured)
+      * GQA prefill: context-parallel FSDP (fsdp_seq) — tokens stay
+        seq-sharded, KV replicates cheaply (-60..80% measured); MLA
+        prefill stays SP+TP (k-expansion gathers made fsdp_seq +28%)
+      * MoE train / decode / multi-pod train: SP+TP (EP needs `model`;
+        decode parallelism comes from the seq-sharded cache)."""
+    family = cfg.family
+    has_mla = getattr(cfg, "mla", None) is not None
+    if kind == "train":
+        if not multi_pod and family in ("dense", "ssm", "audio", "vlm"):
+            return "fsdp"
+        if family == "hybrid":
+            return "fsdp_tp_nosp"
+        return "fsdp_tp"
+    if kind == "prefill" and not has_mla and family in (
+            "dense", "vlm", "moe"):
+        return "fsdp_seq"
+    return "fsdp_tp"
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def resolve_axis(logical: str | None, rules: Mapping, mesh: Mesh,
+                 dim_size: int) -> tuple:
+    """Mesh axes for one dim, keeping only axes that exist and divide."""
+    if logical is None:
+        return ()
+    entry = rules.get(logical, ())
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        entry = (entry,)
+    sizes = _mesh_axis_sizes(mesh)
+    chosen: list = []
+    prod = 1
+    for ax in entry:
+        if ax not in sizes:
+            continue
+        if dim_size % (prod * sizes[ax]) == 0:
+            chosen.append(ax)
+            prod *= sizes[ax]
+        # else: drop this axis (replicate along it) — divisibility fallback
+    return tuple(chosen)
+
+
+def spec_for(axes: Sequence, shape: Sequence[int], mesh: Mesh,
+             rules: Mapping | None = None) -> P:
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used: set = set()
+    for logical, dim in zip(axes, shape):
+        chosen = tuple(a for a in resolve_axis(logical, rules, mesh, dim)
+                       if a not in used)
+        used.update(chosen)
+        if len(chosen) == 0:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return P(*parts)
+
+
+def plan_shardings(plan, mesh: Mesh, rules: Mapping | None = None):
+    """NamedSharding tree for a parameter plan."""
+    return P_.tree_map_specs(
+        lambda s: NamedSharding(mesh, spec_for(s.axes, s.shape, mesh, rules)),
+        plan)
+
+
+def plan_pspecs(plan, mesh: Mesh, rules: Mapping | None = None):
+    return P_.tree_map_specs(
+        lambda s: spec_for(s.axes, s.shape, mesh, rules), plan)
+
+
+def constrain(x, mesh: Mesh, axes: Sequence, rules: Mapping | None = None):
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    spec = spec_for(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_devices(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for tiled_linear."""
+import jax.numpy as jnp
+
+
+def tiled_matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(x.dtype)

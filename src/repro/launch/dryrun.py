@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the specialized step program (steps.make_step),
+``jit(...).lower(abstract_inputs).compile()`` against the production mesh,
+and record:
+  * memory_analysis()  — per-device bytes (proves the cell fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective operand bytes parsed from the compiled HLO.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all            # every applicable cell
+  python -m repro.launch.dryrun --all --multi-pod
+Results append to benchmarks/results/dryrun/<cell>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.common import SHAPES, applicable_shapes
+from repro.configs.registry import ARCHS, get_config
+from repro.distributed import hlo as hlo_mod
+from repro.distributed.sharding import RULE_PRESETS
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def _mem_summary(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             rules: str = "auto", variant: str = "",
+             save_hlo: bool = False, accum: int | None = None) -> dict:
+    import dataclasses as _dc
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if accum is not None:
+        cfg = _dc.replace(cfg, grad_accum=accum)
+    rec = {"arch": arch, "shape": shape, "variant": variant or rules,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "n_devices": mesh.devices.size, "rules": rules}
+    t0 = time.time()
+    try:
+        bundle = steps_mod.make_step(
+            cfg, shape, mesh,
+            None if rules == "auto" else RULE_PRESETS[rules])
+        lowered = bundle.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo_text = compiled.as_text()
+        coll = hlo_mod.collective_stats(hlo_text)
+        dots = hlo_mod.dot_stats(hlo_text)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            flops=float(cost.get("flops", -1)),
+            bytes_accessed=float(cost.get("bytes accessed", -1)),
+            hlo_dot_flops=float(dots["flops"]),
+            hlo_dot_bytes=float(dots["bytes"]),
+            hlo_dot_count=int(dots["count"]),
+            memory=_mem_summary(compiled),
+            collectives={k: v for k, v in coll.items()
+                         if not isinstance(v, dict) or v["count"]},
+            collective_bytes=int(coll["total_bytes"]),
+            collective_bytes_tpu=int(coll["tpu_total_bytes"]),
+            hlo_chars=len(hlo_text),
+        )
+        if save_hlo:
+            rec["hlo_path"] = os.path.join(
+                RESULTS_DIR, f"{arch}__{shape}__{rec['mesh']}.hlo")
+            with open(rec["hlo_path"], "w") as f:
+                f.write(hlo_text)
+    except Exception as e:  # a failing cell is a bug in the system
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def save(rec: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    name = (f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+            f"__{rec['variant']}.json")
+    with open(os.path.join(RESULTS_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rules", default="auto",
+                    choices=["auto"] + list(RULE_PRESETS))
+    ap.add_argument("--variant", default="", help="perf-iteration tag")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([args.shape] if args.shape
+                  else applicable_shapes(cfg))
+        for shape in shapes:
+            if shape not in applicable_shapes(cfg):
+                print(f"SKIP {arch} x {shape}: inapplicable "
+                      f"(see DESIGN.md shape-skip rules)")
+                continue
+            pods = [args.multi_pod] if not args.both_meshes \
+                else [False, True]
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    for arch, shape, mp in cells:
+        mesh_name = "2x16x16" if mp else "16x16"
+        out = os.path.join(
+            RESULTS_DIR, f"{arch}__{shape}__{mesh_name}"
+            f"__{args.variant or args.rules}.json")
+        if args.skip_existing and os.path.exists(out):
+            print(f"SKIP (cached) {arch} x {shape} x {mesh_name}")
+            continue
+        print(f"=== {arch} x {shape} x {mesh_name} ===", flush=True)
+        rec = run_cell(arch, shape, multi_pod=mp, rules=args.rules,
+                       variant=args.variant, save_hlo=args.save_hlo)
+        save(rec)
+        if rec["ok"]:
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"flops={rec['flops']:.3e} "
+                  f"coll={rec['collective_bytes']:.3e}B "
+                  f"mem={rec.get('memory', {})}", flush=True)
+        else:
+            print(f"  FAIL: {rec['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

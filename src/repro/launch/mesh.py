@@ -1,0 +1,32 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model). Multi-pod: 2 pods x 256
+    chips (pod, data, model) = 512. The dry-run launcher sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 before jax init."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_devices(devices, shape, axes) -> Mesh:
+    """Build a mesh from an explicit device subset (elastic replan path)."""
+    n = int(np.prod(shape))
+    if len(devices) < n:
+        raise ValueError(f"need {n} devices, have {len(devices)}")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1, data: int | None = None) -> Mesh:
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    devs = jax.devices()
+    data = data or (len(devs) // model)
+    return Mesh(np.asarray(devs[:data * model]).reshape(data, model),
+                ("data", "model"))

@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill + decode loop with donated KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import lm
+from repro.nn import param as prm
+
+
+def pad_caches(prefill_caches, full_caches):
+    """Write prompt-length caches into the full-length serving buffers."""
+    def place(full, part):
+        if full.shape == part.shape:
+            return part.astype(full.dtype)
+        return jax.lax.dynamic_update_slice(
+            full, part.astype(full.dtype), (0,) * full.ndim)
+    return jax.tree_util.tree_map(place, full_caches, prefill_caches)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS), default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    plan = lm.model_plan(cfg)
+    params = prm.materialize(plan, jax.random.key(0))
+    b, pl_, total = args.batch, args.prompt_len, args.prompt_len + args.gen
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, pl_)), jnp.int32)
+    mem = None
+    if cfg.family == "vlm":
+        mem = jnp.zeros((b, cfg.num_mem_tokens, cfg.mem_dim), jnp.bfloat16)
+    if cfg.family == "audio":
+        mem = jnp.zeros((b, total, cfg.d_model), jnp.bfloat16)
+
+    mem_len = total if cfg.family == "audio" else cfg.num_mem_tokens
+    cplan = lm.cache_plan(cfg, b, total, mem_len=mem_len)
+    caches = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), prm.abstract(cplan))
+
+    logits, pref_caches = jax.jit(
+        lambda p, ids: lm.prefill(p, cfg, ids, mem))(params, prompts)
+    caches = pad_caches(pref_caches, caches)
+
+    decode = jax.jit(
+        lambda p, c, ids, pos: lm.decode_step(p, cfg, c, ids, pos),
+        donate_argnums=(1,))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for i in range(args.gen):
+        logits, caches = decode(params, caches, tok, jnp.int32(pl_ + i))
+        tok = jnp.argmax(logits[:, 0], axis=-1)[:, None].astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    print(f"arch={cfg.name} generated {gen.shape} tokens "
+          f"({args.gen * b / dt:.1f} tok/s total, "
+          f"{dt / args.gen * 1e3:.1f} ms/step)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Step builders: specialized train / prefill / decode programs per
+(arch x shape x mesh x rules) — the TPU analogue of GNNBuilder's generated
+accelerators. Each builder returns the pure step fn plus abstract inputs
+and shardings, so callers can ``jit(...).lower(...).compile()`` without
+allocating anything (dry-run) or materialize and run (examples/tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.common import SHAPES
+from repro.distributed import sharding as shd
+from repro.models import lm
+from repro.nn import param as prm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jit().lower(*self.abstract_args)
+
+
+def make_constrain(mesh, rules):
+    return lambda x, axes: shd.constrain(x, mesh, axes, rules)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _batch_io_specs(cfg: lm.LMConfig, seq: int, batch: int, mesh, rules):
+    """Abstract train/prefill batch + shardings for each arch family."""
+    bspec = shd.spec_for(("batch", None), (batch, seq), mesh, rules)
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "audio":
+        dec = seq // cfg.dec_len_ratio
+        bspec_d = shd.spec_for(("batch", None), (batch, dec), mesh, rules)
+        mspec = shd.spec_for(("batch", None, None),
+                             (batch, seq, cfg.d_model), mesh, rules)
+        batch_abs = {"tokens": sds((batch, dec), jnp.int32),
+                     "labels": sds((batch, dec), jnp.int32),
+                     "mem": sds((batch, seq, cfg.d_model), jnp.bfloat16)}
+        batch_sh = {"tokens": _named(mesh, bspec_d),
+                    "labels": _named(mesh, bspec_d),
+                    "mem": _named(mesh, mspec)}
+    elif cfg.family == "vlm":
+        mshape = (batch, cfg.num_mem_tokens, cfg.mem_dim)
+        mspec = shd.spec_for(("batch", None, None), mshape, mesh, rules)
+        batch_abs = {"tokens": sds((batch, seq), jnp.int32),
+                     "labels": sds((batch, seq), jnp.int32),
+                     "mem": sds(mshape, jnp.bfloat16)}
+        batch_sh = {"tokens": _named(mesh, bspec),
+                    "labels": _named(mesh, bspec),
+                    "mem": _named(mesh, mspec)}
+    else:
+        batch_abs = {"tokens": sds((batch, seq), jnp.int32),
+                     "labels": sds((batch, seq), jnp.int32)}
+        batch_sh = {"tokens": _named(mesh, bspec),
+                    "labels": _named(mesh, bspec)}
+    return batch_abs, batch_sh
+
+
+def make_train_step(cfg: lm.LMConfig, mesh, rules=None,
+                    opt_cfg: adamw.OptConfig | None = None,
+                    seq: int = 4096, batch: int = 256) -> StepBundle:
+    rules = rules or shd.DEFAULT_RULES
+    cons = make_constrain(mesh, rules)
+    plan = lm.model_plan(cfg)
+    if opt_cfg is None:
+        # >=100B params: bf16 Adam moments (fp32 state would not fit HBM)
+        big = prm.count_params(plan) >= 100e9
+        opt_cfg = adamw.OptConfig(
+            moment_dtype="bfloat16" if big else "float32")
+    oplan = adamw.opt_plan(plan, opt_cfg)
+    accum = max(1, cfg.grad_accum)
+
+    def micro_grads(params, micro):
+        def loss_of(p):
+            return lm.loss_fn(p, cfg, micro, constrain=cons,
+                              sync_grads=True)
+        return jax.value_and_grad(loss_of)(params)
+
+    def train_step(params, opt_state, batch_data):
+        if accum == 1:
+            loss, grads = micro_grads(params, batch_data)
+        else:
+            # microbatched gradient accumulation: activations shrink by
+            # `accum`, gradients accumulate in their (sharded) storage.
+            micros = jax.tree_util.tree_map(
+                lambda a: a.reshape(accum, a.shape[0] // accum,
+                                    *a.shape[1:]), batch_data)
+
+            def body(carry, micro):
+                loss_sum, gsum = carry
+                loss, g = micro_grads(params, micro)
+                gsum = jax.tree_util.tree_map(
+                    lambda acc, gi: acc + gi.astype(acc.dtype), gsum, g)
+                return (loss_sum + loss, gsum), None
+
+            acc_dt = jnp.dtype(opt_cfg.moment_dtype)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micros)
+            loss = loss_sum / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        new_params, new_state, metrics = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return new_params, new_state, dict(metrics, loss=loss)
+
+    batch_abs, batch_sh = _batch_io_specs(cfg, seq, batch, mesh, rules)
+    p_sh = shd.plan_shardings(plan, mesh, rules)
+    o_sh = shd.plan_shardings(oplan, mesh, rules)
+    return StepBundle(
+        name=f"{cfg.name}:train", fn=train_step,
+        abstract_args=(prm.abstract(plan), prm.abstract(oplan), batch_abs),
+        in_shardings=(p_sh, o_sh, batch_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1))
+
+
+def make_prefill_step(cfg: lm.LMConfig, mesh, rules=None, seq: int = 32768,
+                      batch: int = 32) -> StepBundle:
+    rules = rules or shd.DEFAULT_RULES
+    cons = make_constrain(mesh, rules)
+    plan = lm.model_plan(cfg)
+    # prefill keeps activations; dots-only remat is the right default
+    cfg = dataclasses.replace(cfg, remat="dots")
+
+    def prefill_step(params, batch_data):
+        tokens = batch_data["tokens"]
+        logits, caches = lm.prefill(params, cfg, tokens,
+                                    batch_data.get("mem"), constrain=cons)
+        return logits, caches
+
+    batch_abs, batch_sh = _batch_io_specs(cfg, seq, batch, mesh, rules)
+    batch_abs.pop("labels")
+    batch_sh.pop("labels")
+    if cfg.family == "audio":   # decoder prompt length = seq // ratio
+        pass
+    p_sh = shd.plan_shardings(plan, mesh, rules)
+    return StepBundle(
+        name=f"{cfg.name}:prefill", fn=prefill_step,
+        abstract_args=(prm.abstract(plan), batch_abs),
+        in_shardings=(p_sh, batch_sh),
+        out_shardings=None)
+
+
+def make_decode_step(cfg: lm.LMConfig, mesh, rules=None, seq: int = 32768,
+                     batch: int = 128, long_context: bool = False
+                     ) -> StepBundle:
+    rules = rules or shd.DEFAULT_RULES
+    seq_axis = "long_seq" if long_context else "kv_seq"
+    cons = make_constrain(mesh, rules)
+    plan = lm.model_plan(cfg)
+    mem_len = seq if cfg.family == "audio" else cfg.num_mem_tokens
+    cplan = lm.cache_plan(cfg, batch, seq, mem_len=mem_len,
+                          seq_axis=seq_axis)
+
+    def decode_fn(params, caches, ids, pos):
+        return lm.decode_step(params, cfg, caches, ids, pos, constrain=cons)
+
+    ids_abs = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    ids_sh = _named(mesh, shd.spec_for(("batch", None), (batch, 1), mesh,
+                                       rules))
+    pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    p_sh = shd.plan_shardings(plan, mesh, rules)
+    c_sh = shd.plan_shardings(cplan, mesh, rules)
+    return StepBundle(
+        name=f"{cfg.name}:decode", fn=decode_fn,
+        abstract_args=(prm.abstract(plan), prm.abstract(cplan), ids_abs,
+                       pos_abs),
+        in_shardings=(p_sh, c_sh, ids_sh, _named(mesh, P())),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,))
+
+
+def make_gnn_train_step(cfg, mesh, rules=None, batch: int = 2048,
+                        opt_cfg: adamw.OptConfig | None = None
+                        ) -> StepBundle:
+    """Distributed GNN training: graphs shard over the batch axes (the
+    paper's workloads as first-class citizens of the same launcher)."""
+    from repro.core import gnn_model as G
+    rules = rules or shd.DEFAULT_RULES
+    opt_cfg = opt_cfg or adamw.OptConfig()
+    plan = G.model_plan(cfg)
+    oplan = adamw.opt_plan(plan, opt_cfg)
+    ds = getattr(cfg, "dataset", None)
+    n, e = 600, 600
+    fdim = cfg.graph_input_feature_dim
+    edim = cfg.graph_input_edge_dim
+    tgt = cfg.mlp_head.out_dim if cfg.mlp_head else 1
+
+    def train_step(params, opt_state, batch_data):
+        def loss_of(p):
+            return G.mse_loss(p, cfg, batch_data)
+        loss, grads = jax.value_and_grad(loss_of)(params)
+        new_p, new_o, metrics = adamw.apply_updates(opt_cfg, params, grads,
+                                                    opt_state)
+        return new_p, new_o, dict(metrics, loss=loss)
+
+    sds = jax.ShapeDtypeStruct
+    batch_abs = {
+        "node_feat": sds((batch, n, fdim), jnp.float32),
+        "edge_index": sds((batch, e, 2), jnp.int32),
+        "edge_feat": sds((batch, e, edim), jnp.float32),
+        "num_nodes": sds((batch,), jnp.int32),
+        "y": sds((batch, tgt), jnp.float32),
+    }
+    bsh = {k: _named(mesh, shd.spec_for(
+        ("batch",) + (None,) * (len(v.shape) - 1), v.shape, mesh, rules))
+        for k, v in batch_abs.items()}
+    p_sh = shd.plan_shardings(plan, mesh, rules)
+    o_sh = shd.plan_shardings(oplan, mesh, rules)
+    return StepBundle(
+        name=f"gnn:{cfg.gnn_conv}:train", fn=train_step,
+        abstract_args=(prm.abstract(plan), prm.abstract(oplan), batch_abs),
+        in_shardings=(p_sh, o_sh, bsh), out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1))
+
+
+def make_step(cfg: lm.LMConfig, shape_name: str, mesh,
+              rules=None) -> StepBundle:
+    """(arch x shape) -> the step the assignment says that shape lowers."""
+    info = SHAPES[shape_name]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    if rules is None:
+        preset = shd.auto_preset(cfg, kind, "pod" in mesh.axis_names)
+        rules = shd.RULE_PRESETS[preset]
+    if kind == "train":
+        return make_train_step(cfg, mesh, rules, seq=seq, batch=batch)
+    if kind == "prefill":
+        return make_prefill_step(cfg, mesh, rules, seq=seq, batch=batch)
+    return make_decode_step(cfg, mesh, rules, seq=seq, batch=batch,
+                            long_context=(shape_name == "long_500k"))

@@ -1,0 +1,463 @@
+"""Generic block-program LM covering every assigned architecture.
+
+A model is a *superblock* — a tuple of (mixer, ffn) rows — scanned
+``repeat`` times (plus optional unscanned ``prefix`` rows). Mixers:
+``attn`` / ``attn_bidir`` / ``xattn`` / ``mla`` / ``mamba`` / ``rwkv`` /
+``None``; FFNs: ``mlp`` / ``moe`` / ``cmix`` / ``None``. Scanning keeps the
+HLO size independent of depth, which is what makes 512-device dry-run
+compiles tractable and is also the production-correct choice (compile time,
+cache pressure).
+
+All functions are pure; parameters come from ``model_plan`` (see
+``nn.param``), decode caches from ``cache_plan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+from repro.nn import mamba as M
+from repro.nn import moe as MOE
+from repro.nn import rwkv as R
+from repro.nn.layers import (chunked_softmax_xent, embed, embedding_plan,
+                             layernorm, layernorm_plan, linear, linear_plan,
+                             mlp, mlp_plan, rmsnorm, rmsnorm_plan)
+from repro.nn.param import ParamSpec, stack_plan
+
+Row = tuple  # (mixer_kind | None, ffn_kind | None)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    superblock: tuple
+    repeat: int
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                   # dense | moe | hybrid | ssm | audio | vlm
+    d_model: int
+    vocab_size: int
+    superblock: tuple             # tuple[Row, ...]
+    repeat: int
+    prefix: tuple = ()            # unscanned leading rows
+    attn: A.AttnConfig | None = None
+    mla: A.MLAConfig | None = None
+    moe: MOE.MoEConfig | None = None
+    mamba: M.MambaConfig | None = None
+    rwkv: R.RWKVConfig | None = None
+    d_ff: int = 0
+    activation: str = "silu"
+    norm: str = "rmsnorm"
+    encoder: EncoderConfig | None = None
+    num_mem_tokens: int = 0       # vlm image patches / set >0 to enable mem
+    mem_dim: int = 0              # raw frontend embedding width
+    dec_len_ratio: int = 1        # enc-dec: decoder_len = seq // ratio
+    xent_chunk: int = 1024
+    remat: str = "full"           # none | dots | full
+    grad_accum: int = 1           # microbatches per train step
+    aux_loss_weight: float = 0.01
+    sub_quadratic: bool = False   # supports long_500k
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.prefix) + self.repeat * len(self.superblock)
+
+
+# ================================================================= plans ==
+def _norm_plan(cfg: LMConfig):
+    return (rmsnorm_plan(cfg.d_model, cfg.dtype, "embed")
+            if cfg.norm == "rmsnorm"
+            else layernorm_plan(cfg.d_model, cfg.dtype, "embed"))
+
+
+def _apply_norm(cfg: LMConfig, p, x):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+def _mixer_plan(cfg: LMConfig, kind: str):
+    if kind in ("attn", "attn_bidir"):
+        return A.attn_plan(cfg.attn, cfg.dtype)
+    if kind == "xattn":
+        return A.xattn_plan(cfg.attn, cfg.d_model, cfg.dtype)
+    if kind == "mla":
+        return A.mla_plan(cfg.mla, cfg.dtype)
+    if kind == "mamba":
+        return M.mamba_plan(cfg.mamba, cfg.dtype)
+    if kind == "rwkv":
+        return R.time_mix_plan(cfg.rwkv, cfg.dtype)
+    raise ValueError(kind)
+
+
+def _ffn_plan(cfg: LMConfig, kind: str):
+    if kind == "mlp":
+        return mlp_plan(cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    if kind == "moe":
+        return MOE.moe_plan(cfg.moe, cfg.dtype)
+    if kind == "cmix":
+        return R.channel_mix_plan(cfg.rwkv, cfg.dtype)
+    raise ValueError(kind)
+
+
+def _row_plan(cfg: LMConfig, row: Row):
+    mixer, ffn = row
+    p = {}
+    if mixer is not None:
+        p["norm1"] = _norm_plan(cfg)
+        p["mixer"] = _mixer_plan(cfg, mixer)
+    if ffn is not None:
+        p["norm2"] = _norm_plan(cfg)
+        p["ffn"] = _ffn_plan(cfg, ffn)
+    return p
+
+
+def _stack_rows(cfg: LMConfig, rows: tuple):
+    return {f"r{i}": _row_plan(cfg, row) for i, row in enumerate(rows)}
+
+
+def model_plan(cfg: LMConfig):
+    plan = {
+        "embed": embedding_plan(cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "blocks": stack_plan(_stack_rows(cfg, cfg.superblock), cfg.repeat),
+        "final_norm": _norm_plan(cfg),
+        "out": linear_plan(cfg.d_model, cfg.vocab_size, in_axis="embed",
+                           out_axis="vocab", dtype=cfg.dtype),
+    }
+    if cfg.prefix:
+        plan["prefix"] = {f"p{i}": _row_plan(cfg, row)
+                          for i, row in enumerate(cfg.prefix)}
+    if cfg.encoder is not None:
+        plan["encoder"] = {
+            "blocks": stack_plan(_stack_rows(cfg, cfg.encoder.superblock),
+                                 cfg.encoder.repeat),
+            "final_norm": _norm_plan(cfg),
+        }
+    if cfg.num_mem_tokens:
+        plan["mem_proj"] = linear_plan(cfg.mem_dim or cfg.d_model,
+                                       cfg.d_model, in_axis=None,
+                                       out_axis="embed", dtype=cfg.dtype)
+    return plan
+
+
+def _row_cache_plan(cfg: LMConfig, row: Row, batch: int, seq: int,
+                    mem_len: int, seq_axis: str):
+    mixer, ffn = row
+    c = {}
+    if mixer in ("attn", "attn_bidir"):
+        kv, hd = cfg.attn.num_kv_heads, cfg.attn.head_dim
+        shp, ax = (batch, seq, kv, hd), ("batch", seq_axis, None, None)
+        c["k"] = ParamSpec(shp, cfg.dtype, ax, init="zeros")
+        c["v"] = ParamSpec(shp, cfg.dtype, ax, init="zeros")
+    elif mixer == "xattn":
+        kv, hd = cfg.attn.num_kv_heads, cfg.attn.head_dim
+        shp, ax = (batch, mem_len, kv, hd), ("batch", seq_axis, None, None)
+        c["mk"] = ParamSpec(shp, cfg.dtype, ax, init="zeros")
+        c["mv"] = ParamSpec(shp, cfg.dtype, ax, init="zeros")
+    elif mixer == "mla":
+        c["c"] = ParamSpec((batch, seq, cfg.mla.cache_dim), cfg.dtype,
+                           ("batch", seq_axis, None), init="zeros")
+    elif mixer == "mamba":
+        m = cfg.mamba
+        c["conv"] = ParamSpec((batch, m.d_inner, m.d_conv - 1), cfg.dtype,
+                              ("batch", "state", None), init="zeros")
+        c["ssm"] = ParamSpec((batch, m.d_inner, m.d_state), jnp.float32,
+                             ("batch", "state", None), init="zeros")
+    elif mixer == "rwkv":
+        r = cfg.rwkv
+        c["state"] = ParamSpec((batch, r.num_heads, r.head_dim, r.head_dim),
+                               jnp.float32, ("batch", "heads", None, None),
+                               init="zeros")
+        c["tm_last"] = ParamSpec((batch, cfg.d_model), cfg.dtype,
+                                 ("batch", "embed"), init="zeros")
+    if ffn == "cmix":
+        c["cm_last"] = ParamSpec((batch, cfg.d_model), cfg.dtype,
+                                 ("batch", "embed"), init="zeros")
+    return c
+
+
+def cache_plan(cfg: LMConfig, batch: int, seq: int, mem_len: int = 0,
+               seq_axis: str = "kv_seq"):
+    """Decode-cache spec tree (ParamSpecs -> abstract()/materialize())."""
+    plan = {"blocks": stack_plan(
+        {f"r{i}": _row_cache_plan(cfg, row, batch, seq, mem_len, seq_axis)
+         for i, row in enumerate(cfg.superblock)}, cfg.repeat)}
+    if cfg.prefix:
+        plan["prefix"] = {
+            f"p{i}": _row_cache_plan(cfg, row, batch, seq, mem_len, seq_axis)
+            for i, row in enumerate(cfg.prefix)}
+    return plan
+
+
+# =============================================================== forward ==
+def _bidir(cfg: LMConfig) -> A.AttnConfig:
+    return dataclasses.replace(cfg.attn, causal=False)
+
+
+def _apply_row(cfg: LMConfig, row: Row, p, x, positions, mem,
+               constrain) -> tuple:
+    """Full-sequence row application. Returns (x, cache, aux)."""
+    mixer, ffn = row
+    cache, aux = {}, jnp.zeros((), jnp.float32)
+    # Megatron-SP boundary: 'mixer_seq' rules decide whether the sequence
+    # is gathered before the mixer/ffn matmuls (SP+TP) or stays sharded
+    # with weights gathered instead (fsdp_seq preset). NOTE: fusing the
+    # gather region across mixer+ffn (gather once per row) was tried and
+    # MEASURED WORSE (+30% collectives on deepseek-v2/jamba train — the
+    # full-domain residual adds force extra reshards); see §Perf.
+    gather_seq = lambda t: constrain(t, ("batch", "mixer_seq", None))
+    scatter_seq = lambda t: constrain(t, ("batch", "act_seq", "embed"))
+    # nested remat: each mixer/ffn is its own checkpoint region, so the
+    # backward pass holds one sub-block's intermediates at a time instead
+    # of a whole superblock's (jamba: 8 rows/superblock).
+    ckpt = jax.checkpoint if cfg.remat != "none" else (lambda f: f)
+    if mixer is not None:
+        h = gather_seq(_apply_norm(cfg, p["norm1"], x))
+
+        def run_mixer(p_m, h):
+            if mixer == "attn":
+                y, (k, v) = A.attn_forward(p_m, h, cfg.attn, positions,
+                                           constrain)
+                return y, {"k": k, "v": v}
+            if mixer == "attn_bidir":
+                y, _ = A.attn_forward(p_m, h, _bidir(cfg), positions,
+                                      constrain)
+                return y, {}
+            if mixer == "xattn":
+                mk, mv = A.xattn_kv(p_m, mem, cfg.attn)
+                y = A.xattn_forward(p_m, h, (mk, mv), cfg.attn, constrain)
+                return y, {"mk": mk, "mv": mv}
+            if mixer == "mla":
+                y, c = A.mla_forward(p_m, h, cfg.mla, positions, constrain)
+                return y, {"c": c}
+            if mixer == "mamba":
+                y, (conv, ssm) = M.mamba_forward(p_m, h, cfg.mamba,
+                                                 constrain)
+                return y, {"conv": conv, "ssm": ssm}
+            if mixer == "rwkv":
+                y, (state, last) = R.time_mix_forward(p_m, h, cfg.rwkv,
+                                                      constrain=constrain)
+                return y, {"state": state, "tm_last": last}
+            raise ValueError(mixer)
+
+        y, cache = ckpt(run_mixer)(p["mixer"], h)
+        x = x + scatter_seq(y)
+    if ffn is not None:
+        h = gather_seq(_apply_norm(cfg, p["norm2"], x))
+
+        def run_ffn(p_f, h):
+            if ffn == "mlp":
+                return mlp(p_f, h, cfg.activation), {}, \
+                    jnp.zeros((), jnp.float32)
+            if ffn == "moe":
+                y, aux = MOE.moe_forward(p_f, h, cfg.moe, constrain)
+                return y, {}, aux
+            if ffn == "cmix":
+                y, cm_last = R.channel_mix_forward(p_f, h)
+                return y, {"cm_last": cm_last}, jnp.zeros((), jnp.float32)
+            raise ValueError(ffn)
+
+        y, extra, aux = ckpt(run_ffn)(p["ffn"], h)
+        cache.update(extra)
+        x = x + scatter_seq(y)
+    return x, cache, aux
+
+
+def _remat(cfg: LMConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_encoder(params, cfg: LMConfig, frames, constrain):
+    enc = params["encoder"]
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(x, layer):
+        for i, row in enumerate(cfg.encoder.superblock):
+            x, _, _ = _apply_row(cfg, row, layer[f"r{i}"], x, positions,
+                                 None, constrain)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), frames.astype(cfg.dtype),
+                        enc["blocks"])
+    return _apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward(params, cfg: LMConfig, ids, mem=None, *, constrain=A.NO_CONSTRAIN,
+            collect_caches: bool = False, positions=None,
+            sync_grads: bool = False):
+    """ids: (B, S) tokens. mem: frontend embeddings (vlm patches / audio
+    frames). Returns (hidden, caches | None, aux_loss).
+
+    sync_grads=True wraps parameters with nn.gradsync so weight cotangents
+    cross the network as sharded bf16 reduce-scatters (see gradsync.py);
+    layer params are wrapped *inside* the scan body.
+    """
+    from repro.nn.gradsync import sync_tree
+    row_plan = _stack_rows(cfg, cfg.superblock) if sync_grads else None
+    if sync_grads:
+        top_plan = model_plan(cfg)
+        params = dict(params)
+        for key in ("embed", "final_norm", "mem_proj", "encoder",
+                    "prefix"):
+            if key in params:
+                params[key] = sync_tree(params[key], top_plan[key],
+                                        constrain)
+    b, s = ids.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = embed(params["embed"], ids)
+    x = constrain(x, ("batch", "seq", "embed"))
+    if cfg.encoder is not None and mem is not None:
+        mem = _run_encoder(params, cfg, mem, constrain)
+    elif cfg.num_mem_tokens and mem is not None:
+        mem = linear(params["mem_proj"], mem.astype(cfg.dtype))
+
+    caches: dict = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.prefix:
+        caches["prefix"] = {}
+        for i, row in enumerate(cfg.prefix):
+            x, c, aux = _apply_row(cfg, row, params["prefix"][f"p{i}"], x,
+                                   positions, mem, constrain)
+            caches["prefix"][f"p{i}"] = c
+            aux_total = aux_total + aux
+
+    def body(carry, layer):
+        x, aux_sum = carry
+        if sync_grads:   # wrap layer slices so grads RS inside the scan
+            layer = sync_tree(layer, row_plan, constrain)
+        # residual stream is sequence-sharded at block boundaries (SP);
+        # this is what the scan carry / remat residuals store.
+        x = constrain(x, ("batch", "act_seq", "embed"))
+        row_caches = {}
+        for i, row in enumerate(cfg.superblock):
+            x, c, aux = _apply_row(cfg, row, layer[f"r{i}"], x, positions,
+                                   mem, constrain)
+            row_caches[f"r{i}"] = c
+            aux_sum = aux_sum + aux
+        x = constrain(x, ("batch", "act_seq", "embed"))
+        return (x, aux_sum), (row_caches if collect_caches else None)
+
+    (x, aux_total), ys = jax.lax.scan(
+        _remat(cfg, body), (x, aux_total), params["blocks"])
+    if collect_caches:
+        caches["blocks"] = ys
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return x, (caches if collect_caches else None), aux_total
+
+
+def loss_fn(params, cfg: LMConfig, batch, *, constrain=A.NO_CONSTRAIN,
+            sync_grads: bool = False):
+    """batch: {tokens (B,S), labels (B,S), [mask], [mem]} -> scalar loss."""
+    sync = None
+    if sync_grads:
+        from repro.nn.gradsync import grad_sync
+        sync = lambda w: grad_sync(w, ("embed", "vocab"), constrain)
+    x, _, aux = forward(params, cfg, batch["tokens"], batch.get("mem"),
+                        constrain=constrain, sync_grads=sync_grads)
+    x = constrain(x, ("batch", None, "embed"))   # gather seq for the head
+    loss, _ = chunked_softmax_xent(
+        x, params["out"]["w"], batch["labels"],
+        chunk=min(cfg.xent_chunk, x.shape[1]),
+        label_mask=batch.get("mask"), table_grad_sync=sync)
+    return loss + cfg.aux_loss_weight * aux
+
+
+# ================================================================ decode ==
+def _decode_row(cfg: LMConfig, row: Row, p, x, cache, pos, constrain):
+    mixer, ffn = row
+    new_cache = dict(cache)
+    if mixer is not None:
+        h = _apply_norm(cfg, p["norm1"], x)
+        if mixer == "attn":
+            y, k, v = A.attn_decode(p["mixer"], h, cache["k"], cache["v"],
+                                    pos, cfg.attn, constrain)
+            new_cache.update(k=k, v=v)
+        elif mixer == "xattn":
+            y = A.xattn_forward(p["mixer"], h, (cache["mk"], cache["mv"]),
+                                cfg.attn, constrain)
+        elif mixer == "mla":
+            y, c = A.mla_decode(p["mixer"], h, cache["c"], pos, cfg.mla,
+                                constrain)
+            new_cache.update(c=c)
+        elif mixer == "mamba":
+            y, (conv, ssm) = M.mamba_decode(p["mixer"], h, cache["conv"],
+                                            cache["ssm"], cfg.mamba,
+                                            constrain)
+            new_cache.update(conv=conv, ssm=ssm)
+        elif mixer == "rwkv":
+            y, (state, last) = R.time_mix_forward(
+                p["mixer"], h, cfg.rwkv, state=cache["state"],
+                x_last=cache["tm_last"], constrain=constrain)
+            new_cache.update(state=state, tm_last=last)
+        else:
+            raise ValueError(mixer)
+        x = x + y
+    if ffn is not None:
+        h = _apply_norm(cfg, p["norm2"], x)
+        if ffn == "mlp":
+            y = mlp(p["ffn"], h, cfg.activation)
+        elif ffn == "moe":
+            y, _ = MOE.moe_forward(p["ffn"], h, cfg.moe, constrain)
+        elif ffn == "cmix":
+            y, cm_last = R.channel_mix_forward(p["ffn"], h,
+                                               cache.get("cm_last"))
+            new_cache["cm_last"] = cm_last
+        x = x + y
+    return x, new_cache
+
+
+def decode_step(params, cfg: LMConfig, caches, ids, pos, *,
+                constrain=A.NO_CONSTRAIN):
+    """One serving step: ids (B, 1) new tokens, pos scalar int32 position.
+
+    Returns (logits (B, 1, vocab), updated caches). Cache buffers are
+    donated by the serve jit wrapper.
+    """
+    b = ids.shape[0]
+    x = embed(params["embed"], ids)
+    x = constrain(x, ("batch", "seq", "embed"))
+    new_caches: dict = {}
+    if cfg.prefix:
+        new_caches["prefix"] = {}
+        for i, row in enumerate(cfg.prefix):
+            x, c = _decode_row(cfg, row, params["prefix"][f"p{i}"], x,
+                               caches["prefix"][f"p{i}"], pos, constrain)
+            new_caches["prefix"][f"p{i}"] = c
+
+    def body(x, layer_and_cache):
+        layer, cache = layer_and_cache
+        row_caches = {}
+        for i, row in enumerate(cfg.superblock):
+            x, c = _decode_row(cfg, row, layer[f"r{i}"], x, cache[f"r{i}"],
+                               pos, constrain)
+            row_caches[f"r{i}"] = c
+        return x, row_caches
+
+    x, blocks_cache = jax.lax.scan(body, x, (params["blocks"],
+                                             caches["blocks"]))
+    new_caches["blocks"] = blocks_cache
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = linear(params["out"], x)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, new_caches
+
+
+def prefill(params, cfg: LMConfig, ids, mem=None, *,
+            constrain=A.NO_CONSTRAIN):
+    """Run the full prompt, returning (last-token logits, caches)."""
+    x, caches, _ = forward(params, cfg, ids, mem, constrain=constrain,
+                           collect_caches=True)
+    logits = linear(params["out"], x[:, -1:])
+    return constrain(logits, ("batch", None, "vocab")), caches

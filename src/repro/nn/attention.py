@@ -1,0 +1,365 @@
+"""Attention substrate: GQA (+RoPE, qk-norm), chunked online-softmax
+attention, decode against seq-sharded KV caches, MLA (deepseek-v2) with
+absorbed-matmul decode, and cross-attention (VLM / enc-dec).
+
+TP note: on the fixed 16-way ``model`` axis, head counts that do not divide
+16 are padded up (``num_heads_padded`` in the arch config) — the standard
+Megatron/MaxText constraint; the FLOP overhead is charged honestly in the
+roofline (it appears in HLO_FLOPs, not MODEL_FLOPS).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_plan, rmsnorm
+from repro.nn.param import ParamSpec
+
+Constrain = Callable  # (x, logical_axes) -> x
+NO_CONSTRAIN: Constrain = lambda x, axes: x
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int              # logical head count (paper-exact)
+    num_kv_heads: int
+    head_dim: int
+    num_heads_padded: int = 0   # 0 => same as num_heads
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    use_rope: bool = True
+    chunk: int = 1024           # KV chunk for online-softmax attention
+
+    @property
+    def h(self) -> int:
+        return self.num_heads_padded or self.num_heads
+
+
+# ------------------------------------------------------------------ rope --
+def rope(x, positions, theta: float):
+    """Rotary embedding over the last dim. x: (..., S, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32) / half
+    inv = theta ** -freq                                   # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------- online-softmax chunked attn --
+def online_attention(q, k, v, *, causal: bool, chunk: int,
+                     q_positions=None, kv_positions=None, scale=None):
+    """Memory-efficient attention: lax.scan over KV chunks, online softmax.
+
+    q: (B, H, Sq, Dk); k: (B, H, Skv, Dk); v: (B, H, Skv, Dv).
+    Positions enable causal masking when Sq != Skv (prefill continuation).
+    Scores working set is bounded to (B, H, Sq, chunk).
+    """
+    b, h, sq, dk = q.shape
+    skv, dv = k.shape[2], v.shape[-1]
+    scale = scale if scale is not None else dk ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+    chunk = min(chunk, skv)
+    nc = -(-skv // chunk)
+    pad = nc * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_positions = jnp.concatenate(
+            [kv_positions, jnp.full((pad,), 2**30, kv_positions.dtype)])
+    kc = k.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    pc = kv_positions.reshape(nc, chunk)
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kb.astype(jnp.float32))
+        mask = pb[None, None, None, :] <= 2**29          # padding mask
+        if causal:
+            mask = mask & (pb[None, None, None, :]
+                           <= q_positions[None, None, :, None])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, h, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, dv), jnp.float32))
+    # checkpoint the chunk body: masks/probabilities are recomputed in the
+    # backward pass (flash-attention-style) instead of being stacked.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------- GQA module --
+def attn_plan(cfg: AttnConfig, dtype=jnp.bfloat16):
+    d, h, kv, hd = cfg.d_model, cfg.h, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": linear_plan(d, h * hd, in_axis="embed", out_axis="heads",
+                          dtype=dtype),
+        "wk": linear_plan(d, kv * hd, in_axis="embed", out_axis="kv_flat",
+                          dtype=dtype),
+        "wv": linear_plan(d, kv * hd, in_axis="embed", out_axis="kv_flat",
+                          dtype=dtype),
+        "wo": linear_plan(h * hd, d, in_axis="heads", out_axis="embed",
+                          dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": ParamSpec((hd,), dtype, (None,), init="ones")}
+        p["k_norm"] = {"scale": ParamSpec((hd,), dtype, (None,), init="ones")}
+    return p
+
+
+def _qkv(params, x, cfg: AttnConfig, positions, constrain: Constrain):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.h, cfg.num_kv_heads, cfg.head_dim
+    q = linear(params["wq"], x).reshape(b, s, h, hd)
+    k = linear(params["wk"], x).reshape(b, s, kv, hd)
+    v = linear(params["wv"], x).reshape(b, s, kv, hd)
+    q = constrain(q, ("batch", "mixer_seq", "heads", None))
+    # kv heads (8) never divide the 16-way model axis: keep k/v replicated
+    # (explicitly — otherwise GSPMD falls back to involuntary full remat
+    # when resharding the flat kv projection into heads).
+    k = constrain(k, ("batch", None, None, None))
+    v = constrain(v, ("batch", None, None, None))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    if cfg.use_rope:
+        q = rope(q.transpose(0, 2, 1, 3), positions[:, None, :],
+                 cfg.rope_theta).transpose(0, 2, 1, 3)
+        k = rope(k.transpose(0, 2, 1, 3), positions[:, None, :],
+                 cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _expand_kv(k, h: int, constrain: Constrain, batch_logical="batch"):
+    """(B, S, KV, D) -> (B, H, S, D), sharded to match q heads."""
+    b, s, kvh, hd = k.shape
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3)
+    return constrain(k, (batch_logical, "heads", None, None))
+
+
+def attn_forward(params, x, cfg: AttnConfig, positions,
+                 constrain: Constrain = NO_CONSTRAIN):
+    """Full-sequence attention (train / prefill). Returns (y, (k, v) cache)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, positions, constrain)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = _expand_kv(k, cfg.h, constrain)
+    vh = _expand_kv(v, cfg.h, constrain)
+    out = online_attention(qh, kh, vh, causal=cfg.causal, chunk=cfg.chunk,
+                           q_positions=positions[0], kv_positions=positions[0])
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.h * cfg.head_dim)
+    return linear(params["wo"], y), (k, v)
+
+
+def attn_decode(params, x, k_cache, v_cache, pos, cfg: AttnConfig,
+                constrain: Constrain = NO_CONSTRAIN, seq_axis="kv_seq"):
+    """One-token decode. x: (B, 1, d); caches (B, S, KV, D), seq-sharded.
+
+    pos: scalar int32 — current position (tokens [0, pos) are valid).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    # decode is cache-bandwidth-bound: keep q heads replicated so the GQA
+    # group reshape stays local; parallelism comes from the seq-sharded cache.
+    decode_constrain: Constrain = lambda t, axes: constrain(
+        t, tuple(None if a == "heads" else a for a in axes))
+    q, k, v = _qkv(params, x, cfg, positions, decode_constrain)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    k_cache = constrain(k_cache, ("batch", seq_axis, None, None))
+    v_cache = constrain(v_cache, ("batch", seq_axis, None, None))
+    s = k_cache.shape[1]
+    rep = cfg.h // cfg.num_kv_heads
+    # scores over the seq-sharded cache: softmax/reduce lower to tiny
+    # all-reduces over the `model` axis (flash-decode semantics via GSPMD).
+    qh = q.reshape(b, cfg.num_kv_heads, rep, cfg.head_dim)
+    scores = jnp.einsum("bkrd,bskd->bkrs", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * cfg.head_dim ** -0.5
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", w, v_cache.astype(jnp.float32))
+    y = out.reshape(b, 1, cfg.h * cfg.head_dim).astype(x.dtype)
+    return linear(params["wo"], y), k_cache, v_cache
+
+
+# ------------------------------------------------------ cross-attention --
+def xattn_plan(cfg: AttnConfig, mem_dim: int | None = None,
+               dtype=jnp.bfloat16):
+    d, h, kv, hd = cfg.d_model, cfg.h, cfg.num_kv_heads, cfg.head_dim
+    mem = mem_dim or d
+    return {
+        "wq": linear_plan(d, h * hd, in_axis="embed", out_axis="heads",
+                          dtype=dtype),
+        "wk": linear_plan(mem, kv * hd, in_axis="embed", out_axis="kv_flat",
+                          dtype=dtype),
+        "wv": linear_plan(mem, kv * hd, in_axis="embed", out_axis="kv_flat",
+                          dtype=dtype),
+        "wo": linear_plan(h * hd, d, in_axis="heads", out_axis="embed",
+                          dtype=dtype),
+        "gate": ParamSpec((1,), dtype, (None,), init="zeros"),
+    }
+
+
+def xattn_kv(params, mem, cfg: AttnConfig):
+    b, sm, _ = mem.shape
+    k = linear(params["wk"], mem).reshape(b, sm, cfg.num_kv_heads,
+                                          cfg.head_dim)
+    v = linear(params["wv"], mem).reshape(b, sm, cfg.num_kv_heads,
+                                          cfg.head_dim)
+    return k, v
+
+
+def xattn_forward(params, x, kv, cfg: AttnConfig,
+                  constrain: Constrain = NO_CONSTRAIN):
+    """Cross-attention; kv = (k, v) precomputed from memory (image/encoder)."""
+    b, s, _ = x.shape
+    k, v = kv
+    q = linear(params["wq"], x).reshape(b, s, cfg.h, cfg.head_dim)
+    q = constrain(q, ("batch", "mixer_seq", "heads", None)).transpose(0, 2, 1, 3)
+    kh = _expand_kv(k, cfg.h, constrain)
+    vh = _expand_kv(v, cfg.h, constrain)
+    out = online_attention(q, kh, vh, causal=False, chunk=cfg.chunk)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.h * cfg.head_dim)
+    return jnp.tanh(params["gate"].astype(jnp.float32)).astype(x.dtype) \
+        * linear(params["wo"], y)
+
+
+# -------------------------------------------------------------- MLA (v2) --
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    num_heads: int
+    kv_lora: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    chunk: int = 1024
+
+    @property
+    def cache_dim(self) -> int:
+        return self.kv_lora + self.qk_rope_dim
+
+
+def mla_plan(cfg: MLAConfig, dtype=jnp.bfloat16):
+    d, h = cfg.d_model, cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": linear_plan(d, h * qd, in_axis="embed", out_axis="heads",
+                          dtype=dtype),
+        "w_dkv": linear_plan(d, cfg.kv_lora, in_axis="embed",
+                             out_axis="kv_lora", dtype=dtype),
+        "w_kr": linear_plan(d, cfg.qk_rope_dim, in_axis="embed",
+                            out_axis=None, dtype=dtype),
+        "kv_norm": {"scale": ParamSpec((cfg.kv_lora,), dtype, (None,),
+                                       init="ones")},
+        "w_uk": ParamSpec((cfg.kv_lora, h, cfg.qk_nope_dim), dtype,
+                          ("kv_lora", "heads", None)),
+        "w_uv": ParamSpec((cfg.kv_lora, h, cfg.v_head_dim), dtype,
+                          ("kv_lora", "heads", None)),
+        "wo": linear_plan(h * cfg.v_head_dim, d, in_axis="heads",
+                          out_axis="embed", dtype=dtype),
+    }
+
+
+def _mla_q(params, x, cfg: MLAConfig, positions, constrain: Constrain):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = linear(params["wq"], x).reshape(b, s, h, qd)
+    q = constrain(q, ("batch", "mixer_seq", "heads", None))
+    q_nope, q_rope = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_rope = rope(q_rope.transpose(0, 2, 1, 3), positions[:, None, :],
+                  cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q_nope, q_rope
+
+
+def mla_forward(params, x, cfg: MLAConfig, positions,
+                constrain: Constrain = NO_CONSTRAIN):
+    """Prefill/train MLA. Returns (y, c_cache) with c = [c_kv ; k_rope]."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, constrain)
+    c_kv = rmsnorm(params["kv_norm"], linear(params["w_dkv"], x))
+    k_rope = linear(params["w_kr"], x)                       # (b, s, rope)
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsc,chd->bshd", c_kv, params["w_uk"])
+    v = jnp.einsum("bsc,chd->bshd", c_kv, params["w_uv"])
+    k_nope = constrain(k_nope, ("batch", "seq", "heads", None))
+    v = constrain(v, ("batch", "seq", "heads", None))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, cfg.qk_rope_dim))],
+        axis=-1).transpose(0, 2, 1, 3)
+    k = constrain(k, ("batch", "heads", None, None))
+    vh = v.transpose(0, 2, 1, 3)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    out = online_attention(q, k, vh, causal=True, chunk=cfg.chunk,
+                           q_positions=positions[0],
+                           kv_positions=positions[0], scale=scale)
+    y = out.transpose(0, 2, 1, 3).reshape(b, s, h * cfg.v_head_dim)
+    cache = jnp.concatenate([c_kv, k_rope], axis=-1)         # (b, s, 576)
+    return linear(params["wo"], y), cache
+
+
+def mla_decode(params, x, c_cache, pos, cfg: MLAConfig,
+               constrain: Constrain = NO_CONSTRAIN, seq_axis="kv_seq"):
+    """Absorbed-matmul MLA decode against the compressed (seq-sharded) cache."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    # as in attn_decode: replicate heads, parallelize over the sharded cache.
+    decode_constrain: Constrain = lambda t, axes: constrain(
+        t, tuple(None if a == "heads" else a for a in axes))
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, decode_constrain)
+    c_kv = rmsnorm(params["kv_norm"], linear(params["w_dkv"], x))
+    k_rope = rope(linear(params["w_kr"], x), positions, cfg.rope_theta)
+    new = jnp.concatenate([c_kv, k_rope], axis=-1)
+    c_cache = jax.lax.dynamic_update_slice(
+        c_cache, new.astype(c_cache.dtype), (0, pos, 0))
+    c_cache = constrain(c_cache, ("batch", seq_axis, None))
+    cc, cr = c_cache[..., :cfg.kv_lora], c_cache[..., cfg.kv_lora:]
+    # absorb W_uk into q:  q'[b,h,c] = sum_n q_nope[b,h,n] W_uk[c,h,n]
+    q_abs = jnp.einsum("bhn,chn->bhc", q_nope[:, 0].astype(jnp.float32),
+                       params["w_uk"].astype(jnp.float32))
+    s = c_cache.shape[1]
+    scores = (jnp.einsum("bhc,bsc->bhs", q_abs, cc.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                           cr.astype(jnp.float32)))
+    scores = scores * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    valid = jnp.arange(s)[None, None, :] <= pos
+    w = jax.nn.softmax(jnp.where(valid, scores, -1e30), axis=-1)
+    out_c = jnp.einsum("bhs,bsc->bhc", w, cc.astype(jnp.float32))
+    out = jnp.einsum("bhc,chv->bhv", out_c,
+                     params["w_uv"].astype(jnp.float32))
+    y = out.reshape(b, 1, h * cfg.v_head_dim).astype(x.dtype)
+    return linear(params["wo"], y), c_cache

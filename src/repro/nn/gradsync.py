@@ -1,0 +1,37 @@
+"""Gradient-synchronization control.
+
+``grad_sync(w, axes, constrain)`` is an identity on the forward pass; on
+the backward pass it (1) casts the weight cotangent to the weight dtype
+(bf16 on the wire instead of f32 — 2x collective bytes) and (2) applies the
+weight's sharding constraint to the cotangent, which turns GSPMD's
+all-reduce-then-slice into a reduce-scatter (another ~2x). Applied to layer
+parameters *inside* the scan body so the constraint lands on the
+per-iteration gradient contraction.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.nn import param as prm
+
+
+def grad_sync(w, axes: tuple, constrain):
+    @jax.custom_vjp
+    def ident(x):
+        return x
+
+    def fwd(x):
+        return x, None
+
+    def bwd(_, g):
+        g = g.astype(w.dtype)
+        return (constrain(g, axes),)
+
+    ident.defvjp(fwd, bwd)
+    return ident(w)
+
+
+def sync_tree(params, plan, constrain):
+    """Wrap every param leaf with grad_sync using its plan axes."""
+    return jax.tree_util.tree_map(
+        lambda p, s: grad_sync(p, s.axes, constrain), params, plan)

@@ -1,0 +1,135 @@
+"""Core layers as (plan, apply) pairs over the functional param system."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def act(name: str):
+    return ACTIVATIONS[name]
+
+
+# ---------------------------------------------------------------- linear --
+def linear_plan(d_in: int, d_out: int, *, in_axis=None, out_axis=None,
+                bias: bool = False, dtype=jnp.bfloat16):
+    p = {"w": ParamSpec((d_in, d_out), dtype, (in_axis, out_axis))}
+    if bias:
+        p["b"] = ParamSpec((d_out,), dtype, (out_axis,), init="zeros")
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ------------------------------------------------------------------ norm --
+def rmsnorm_plan(d: int, dtype=jnp.bfloat16, axis=None):
+    return {"scale": ParamSpec((d,), dtype, (axis,), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_plan(d: int, dtype=jnp.bfloat16, axis=None):
+    return {"scale": ParamSpec((d,), dtype, (axis,), init="ones"),
+            "bias": ParamSpec((d,), dtype, (axis,), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding --
+def embedding_plan(vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": ParamSpec((vocab, d), dtype, ("vocab", "embed"),
+                               init="embed")}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+# --------------------------------------------------------------- MLP ffn --
+def mlp_plan(d: int, d_ff: int, *, gated: bool = True, dtype=jnp.bfloat16):
+    p = {"up": linear_plan(d, d_ff, in_axis="embed", out_axis="mlp",
+                           dtype=dtype),
+         "down": linear_plan(d_ff, d, in_axis="mlp", out_axis="embed",
+                             dtype=dtype)}
+    if gated:
+        p["gate"] = linear_plan(d, d_ff, in_axis="embed", out_axis="mlp",
+                                dtype=dtype)
+    return p
+
+
+def mlp(params, x, activation: str = "silu"):
+    h = linear(params["up"], x)
+    if "gate" in params:
+        h = h * act(activation)(linear(params["gate"], x))
+    else:
+        h = act(activation)(h)
+    return linear(params["down"], h)
+
+
+# ------------------------------------------------- chunked cross-entropy --
+def chunked_softmax_xent(x, out_table, labels, *, chunk: int = 1024,
+                         label_mask=None, table_grad_sync=None):
+    """Cross-entropy with the final projection computed in sequence chunks.
+
+    Bounds the logits working set to (batch, chunk, vocab) — required for
+    256k-vocab models (minitron) where full logits would be hundreds of GB.
+    lax.scan keeps chunk lifetimes serial (an unrolled loop lets the
+    scheduler keep every chunk's table-gradient alive at once).
+    ``table_grad_sync`` (from nn.gradsync) is applied *inside* the body so
+    each chunk's out_table cotangent reduce-scatters in bf16 and the scan
+    transpose accumulates it sharded. Returns (mean_loss, total_weight).
+    """
+    b, s, d = x.shape
+    n = max(s // chunk, 1)
+    chunk = s // n
+    assert n * chunk == s, f"seq {s} not divisible by xent chunk {chunk}"
+    if label_mask is None:
+        label_mask = jnp.ones((b, s), jnp.float32)
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)
+    yc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+    mc = label_mask.reshape(b, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    def body(carry, inp):
+        loss_sum, w_sum = carry
+        xb, yb, mb = inp
+        table = table_grad_sync(out_table) if table_grad_sync else out_table
+        logits = (xb @ table).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mb
+        return (loss_sum + nll.sum(), w_sum + mb.sum()), None
+
+    (loss_sum, w_sum), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, yc, mc))
+    return loss_sum / jnp.maximum(w_sum, 1.0), w_sum

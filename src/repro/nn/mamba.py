@@ -1,0 +1,158 @@
+"""Mamba (S6) selective-state-space mixer, chunked for TPU.
+
+Train/prefill uses a chunked parallel scan: lax.scan over sequence chunks
+with an associative scan inside each chunk, so the (B, chunk, d_inner, N)
+working set stays VMEM-friendly and the d_inner channels shard over the
+``model`` axis. Decode is a single recurrence step carrying
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_plan
+from repro.nn.param import ParamSpec
+from repro.nn.attention import Constrain, NO_CONSTRAIN
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    expand: int = 2
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0        # 0 -> ceil(d_model / 16)
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def mamba_plan(cfg: MambaConfig, dtype=jnp.bfloat16):
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.rank
+    return {
+        "in_proj": linear_plan(d, 2 * di, in_axis="embed", out_axis="state",
+                               dtype=dtype),
+        "conv_w": ParamSpec((cfg.d_conv, di), dtype, ("conv", "state"),
+                            scale=0.5),
+        "conv_b": ParamSpec((di,), dtype, ("state",), init="zeros"),
+        "x_proj": linear_plan(di, r + 2 * n, in_axis="state", out_axis=None,
+                              dtype=dtype),
+        "dt_proj": linear_plan(r, di, in_axis=None, out_axis="state",
+                               bias=True, dtype=dtype),
+        "a_log": ParamSpec((di, n), jnp.float32, ("state", None),
+                           init="zeros"),
+        "d_skip": ParamSpec((di,), jnp.float32, ("state",), init="ones"),
+        "out_proj": linear_plan(di, d, in_axis="state", out_axis="embed",
+                                dtype=dtype),
+    }
+
+
+def _ssm_inputs(params, xz, cfg: MambaConfig):
+    """Shared projections: returns (x, z, dt, b_in, c_out, a)."""
+    di, n = cfg.d_inner, cfg.d_state
+    x, z = xz[..., :di], xz[..., di:]
+    proj = linear(params["x_proj"], x)
+    dt_r = proj[..., :cfg.rank]
+    b_in = proj[..., cfg.rank:cfg.rank + n].astype(jnp.float32)
+    c_out = proj[..., cfg.rank + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(linear(params["dt_proj"], dt_r)
+                         .astype(jnp.float32))                 # (..., di)
+    a = -jnp.exp(params["a_log"])                              # (di, n)
+    return x, z, dt, b_in, c_out, a
+
+
+def _scan_chunk(x, dt, b_in, c_out, a, h0):
+    """Associative scan within one chunk. x: (B, L, di); h0: (B, di, N)."""
+    da = jnp.exp(dt[..., None] * a)                  # (B, L, di, N) decay
+    db = dt[..., None] * b_in[:, :, None, :]         # (B, L, di, N)
+    u = db * x.astype(jnp.float32)[..., None]
+
+    def combine(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ur + ar * ul
+
+    a_c, u_c = jax.lax.associative_scan(combine, (da, u), axis=1)
+    h = a_c * h0[:, None] + u_c                      # (B, L, di, N)
+    y = jnp.einsum("bldn,bln->bld", h, c_out)
+    return y, h[:, -1]
+
+
+def mamba_forward(params, x_in, cfg: MambaConfig,
+                  constrain: Constrain = NO_CONSTRAIN):
+    """x_in: (B, S, d). Returns (y, (conv_state, ssm_state)) for caching."""
+    b, s, _ = x_in.shape
+    di = cfg.d_inner
+    xz = linear(params["in_proj"], x_in)
+    xz = constrain(xz, ("batch", "seq", "state"))
+    x, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv via shift-and-add (d_conv is tiny)
+    xp = jnp.pad(x, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))
+    xc = sum(xp[:, i:i + s] * params["conv_w"][i]
+             for i in range(cfg.d_conv)) + params["conv_b"]
+    x = jax.nn.silu(xc)
+    xz2 = jnp.concatenate([x, z], axis=-1)
+    x, z, dt, b_in, c_out, a = _ssm_inputs(params, xz2, cfg)
+
+    chunk = min(cfg.chunk, s)
+    nc = s // chunk
+    assert nc * chunk == s, f"seq {s} % mamba chunk {chunk} != 0"
+
+    # checkpoint the chunk body: the associative-scan intermediates
+    # ((B, chunk, d_inner, N) fp32 tensors) are recomputed in the backward
+    # pass instead of being stacked across chunks (~20 GB/layer otherwise).
+    @jax.checkpoint
+    def body(h, inp):
+        xb, dtb, bb, cb = inp
+        y, h = _scan_chunk(xb, dtb, bb, cb, a, h)
+        return h, y
+
+    resh = lambda t: t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, di, cfg.d_state), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (resh(x), resh(dt), resh(b_in),
+                                         resh(c_out)))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + x.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_in.dtype)
+    y = constrain(y, ("batch", "seq", "state"))
+    conv_state = jnp.pad(x, ((0, 0), (cfg.d_conv - 1, 0), (0, 0))
+                         )[:, -(cfg.d_conv - 1):].swapaxes(1, 2) \
+        if cfg.d_conv > 1 else jnp.zeros((b, di, 0), x.dtype)
+    return linear(params["out_proj"], y), (conv_state, h_last)
+
+
+def mamba_decode(params, x_in, conv_state, ssm_state, cfg: MambaConfig,
+                 constrain: Constrain = NO_CONSTRAIN):
+    """One-step recurrence. x_in: (B, 1, d); conv_state (B, di, d_conv-1);
+    ssm_state (B, di, N)."""
+    b = x_in.shape[0]
+    di = cfg.d_inner
+    xz = linear(params["in_proj"], x_in)[:, 0]          # (B, 2di)
+    x, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([conv_state, x[:, :, None]], axis=-1)
+    # window[..., k]: oldest at k=0, matching the causal shift-and-add above
+    xc = jnp.einsum("bdk,kd->bd", window.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32))
+    xc = xc + params["conv_b"].astype(jnp.float32)
+    x = jax.nn.silu(xc).astype(x_in.dtype)
+    new_conv = window[..., 1:].astype(conv_state.dtype)
+    xz2 = jnp.concatenate([x, z], axis=-1)[:, None]
+    x1, z1, dt, b_in, c_out, a = _ssm_inputs(params, xz2, cfg)
+    x1, z1, dt = x1[:, 0], z1[:, 0], dt[:, 0]
+    b_in, c_out = b_in[:, 0], c_out[:, 0]
+    da = jnp.exp(dt[..., None] * a)                      # (B, di, N)
+    h = da * ssm_state + dt[..., None] * b_in[:, None, :] \
+        * x1.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c_out)
+    y = y + x1.astype(jnp.float32) * params["d_skip"]
+    y = (y * jax.nn.silu(z1.astype(jnp.float32))).astype(x_in.dtype)
+    return linear(params["out_proj"], y)[:, None], (new_conv, h)

@@ -1,0 +1,104 @@
+"""Parameter plans: declarative parameter trees with logical sharding axes.
+
+A *plan* is a pytree (nested dicts) of :class:`ParamSpec`. Models declare
+plans; the runtime can then
+
+* ``materialize(plan, key)``  -> real arrays (smoke tests, examples),
+* ``abstract(plan)``          -> ShapeDtypeStructs (dry-run, no allocation),
+* ``logical_axes(plan)``      -> pytree of logical-axis tuples,
+
+and ``distributed.sharding`` maps logical axes -> mesh PartitionSpecs.
+This mirrors GNNBuilder's split between the *design* (template parameters)
+and the *synthesized artifact* (the compiled program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = tuple  # tuple[str | None, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative spec for one parameter tensor."""
+
+    shape: tuple
+    dtype: Any = jnp.bfloat16
+    axes: Axes = ()           # logical axis name per dim (str or None)
+    init: str = "normal"      # normal | zeros | ones | embed | scaled
+    scale: float | None = None  # stddev override for normal/scaled
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}")
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], plan):
+    return jax.tree_util.tree_map(fn, plan, is_leaf=is_spec)
+
+
+def abstract(plan):
+    """ShapeDtypeStruct tree for dry-run lowering (no device allocation)."""
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), plan)
+
+
+def logical_axes(plan):
+    return tree_map_specs(lambda s: s.axes, plan)
+
+
+def count_params(plan) -> int:
+    leaves = jax.tree_util.tree_leaves(plan, is_leaf=is_spec)
+    return sum(l.size for l in leaves if is_spec(l))
+
+
+def _init_one(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        std = spec.scale or 0.02
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std
+                ).astype(spec.dtype)
+    # normal / scaled: fan-in scaled truncated-normal-ish init.
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std
+            ).astype(spec.dtype)
+
+
+def materialize(plan, key):
+    """Instantiate real arrays for a plan (used by smoke tests/examples)."""
+    leaves, treedef = jax.tree_util.tree_flatten(plan, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(l, k) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def stack_plan(plan, n: int, axis_name: str = "layers"):
+    """Plan for ``n`` scanned copies: prepend a leading stacking axis."""
+    return tree_map_specs(
+        lambda s: ParamSpec((n,) + tuple(s.shape), s.dtype,
+                            (axis_name,) + tuple(s.axes), s.init, s.scale),
+        plan)
+
+
+def cast_plan(plan, dtype):
+    return tree_map_specs(
+        lambda s: ParamSpec(s.shape, dtype, s.axes, s.init, s.scale), plan)

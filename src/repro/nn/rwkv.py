@@ -1,0 +1,148 @@
+"""RWKV-6 ("Finch") attention-free mixer with data-dependent decay.
+
+Time-mix uses the WKV6 recurrence over per-head (hd x hd) outer-product
+state; train/prefill runs a chunked scan (sequential across chunks,
+within-chunk recurrence unrolled via lax.scan over time) keeping state in
+fp32. Decode is one recurrence step. Channel-mix is the RWKV squared-ReLU
+FFN with token shift.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_plan
+from repro.nn.param import ParamSpec
+from repro.nn.attention import Constrain, NO_CONSTRAIN
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0              # channel-mix hidden (0 -> 3.5x d_model)
+    decay_lora: int = 64
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def time_mix_plan(cfg: RWKVConfig, dtype=jnp.bfloat16):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "mu": ParamSpec((5, d), dtype, (None, "embed"), scale=0.02),
+        "w_r": linear_plan(d, d, in_axis="embed", out_axis="heads",
+                           dtype=dtype),
+        "w_k": linear_plan(d, d, in_axis="embed", out_axis="heads",
+                           dtype=dtype),
+        "w_v": linear_plan(d, d, in_axis="embed", out_axis="heads",
+                           dtype=dtype),
+        "w_g": linear_plan(d, d, in_axis="embed", out_axis="heads",
+                           dtype=dtype),
+        # data-dependent decay: low-rank lora w = base + tanh(x A) B
+        "decay_base": ParamSpec((d,), jnp.float32, ("embed",), init="zeros"),
+        "decay_a": linear_plan(d, cfg.decay_lora, in_axis="embed",
+                               out_axis=None, dtype=dtype),
+        "decay_b": linear_plan(cfg.decay_lora, d, in_axis=None,
+                               out_axis="heads", dtype=dtype),
+        "bonus": ParamSpec((h, hd), jnp.float32, ("heads", None),
+                           init="zeros"),
+        "ln_x": {"scale": ParamSpec((d,), dtype, ("embed",), init="ones"),
+                 "bias": ParamSpec((d,), dtype, ("embed",), init="zeros")},
+        "w_o": linear_plan(d, d, in_axis="heads", out_axis="embed",
+                           dtype=dtype),
+    }
+
+
+def channel_mix_plan(cfg: RWKVConfig, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    ff = cfg.d_ff or int(3.5 * d)
+    return {
+        "mu": ParamSpec((2, d), dtype, (None, "embed"), scale=0.02),
+        "w_k": linear_plan(d, ff, in_axis="embed", out_axis="mlp",
+                           dtype=dtype),
+        "w_v": linear_plan(ff, d, in_axis="mlp", out_axis="embed",
+                           dtype=dtype),
+        "w_r": linear_plan(d, d, in_axis="embed", out_axis="mlp",
+                           dtype=dtype),
+    }
+
+
+def _token_shift(x, last):
+    """shift right by one; ``last`` (B, d) is the final token of prev chunk."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_step(state, r, k, v, w, u):
+    """state (B,H,hd,hd); r,k,v (B,H,hd); w decay (B,H,hd); u bonus (H,hd).
+
+    out = r . (state + u * k^T v);  state' = diag(w) state + k^T v
+    """
+    kv = k[..., :, None] * v[..., None, :]            # (B,H,hd,hd)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return state, out
+
+
+def time_mix_forward(params, x, cfg: RWKVConfig, state=None, x_last=None,
+                     constrain: Constrain = NO_CONSTRAIN):
+    """x: (B, S, d). Returns (y, (state, last_token)).
+
+    state: (B, H, hd, hd) fp32 WKV state carried across calls (chunked
+    prefill / decode continuation).
+    """
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    if x_last is None:
+        x_last = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_last)
+    mu = params["mu"]
+    mix = lambda i: x + (xs - x) * mu[i]
+    r = linear(params["w_r"], mix(0)).reshape(b, s, h, hd)
+    k = linear(params["w_k"], mix(1)).reshape(b, s, h, hd)
+    v = linear(params["w_v"], mix(2)).reshape(b, s, h, hd)
+    g = jax.nn.silu(linear(params["w_g"], mix(3)))
+    dec = params["decay_base"] + linear(
+        params["decay_b"], jnp.tanh(linear(params["decay_a"], mix(4)))
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, h, hd)   # data-dependent decay
+    u = params["bonus"]
+
+    def body(st, inp):
+        rt, kt, vt, wt = inp
+        st, out = _wkv_step(st, rt, kt, vt, wt, u)
+        return st, out
+
+    seq_first = lambda t: t.astype(jnp.float32).swapaxes(0, 1)
+    state, outs = jax.lax.scan(
+        body, state, (seq_first(r), seq_first(k), seq_first(v),
+                      seq_first(w)))
+    y = outs.swapaxes(0, 1).reshape(b, s, d)
+    # group-norm per head (ln over hd), then gate and output-project
+    yh = y.reshape(b, s, h, hd)
+    mu_h = yh.mean(-1, keepdims=True)
+    var_h = yh.var(-1, keepdims=True)
+    yh = (yh - mu_h) * jax.lax.rsqrt(var_h + 64e-5)
+    y = yh.reshape(b, s, d) * params["ln_x"]["scale"].astype(jnp.float32) \
+        + params["ln_x"]["bias"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * g)
+    y = constrain(y, ("batch", "seq", "embed"))
+    return linear(params["w_o"], y), (state, x[:, -1])
+
+
+def channel_mix_forward(params, x, x_last=None):
+    b, s, d = x.shape
+    if x_last is None:
+        x_last = jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, x_last)
+    mu = params["mu"]
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(linear(params["w_k"], xk)))
+    return jax.nn.sigmoid(linear(params["w_r"], xr)) \
+        * linear(params["w_v"], k), x[:, -1]

@@ -1,0 +1,94 @@
+"""AdamW + cosine schedule + global-norm clipping, plan-aware.
+
+Optimizer moments are declared as a *plan* (fp32, same logical axes as the
+parameters) so the dry-run can lower a full train_step — params, grads and
+moments all sharded by the same rules table (FSDP+TP by default, which is
+ZeRO-ish sharding of the fp32 state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec, tree_map_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # bf16 moments for >=100B-param models (8-bit-Adam-style state
+    # compression; fp32 Adam state for jamba-398B alone would be 3.2 TB).
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+        * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def opt_plan(param_plan, cfg: OptConfig = OptConfig()):
+    """Plan for optimizer state: m/v mirroring the parameter axes."""
+    dt = jnp.dtype(cfg.moment_dtype)
+    mk = lambda s: ParamSpec(s.shape, dt, s.axes, init="zeros")
+    return {"m": tree_map_specs(mk, param_plan),
+            "v": tree_map_specs(mk, param_plan),
+            "step": ParamSpec((), jnp.int32, (), init="zeros")}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(cfg: OptConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh, vh = mf / bc1, vf / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mf.astype(m.dtype), vf.astype(v.dtype))
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

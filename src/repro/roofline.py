@@ -1,0 +1,197 @@
+"""Roofline analysis over compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (v5e constants):
+
+  compute    = HLO_dot_FLOPs_per_chip / 197e12        (bf16 MXU peak)
+  memory     = HLO_dot_bytes_per_chip / 819e9         (HBM)
+  collective = collective_bytes_per_chip / 50e9       (per-link ICI)
+
+HLO_dot_FLOPs/bytes come from parsing every `dot` in the compiled
+per-device HLO scaled by scan trip counts (distributed.hlo.dot_stats) —
+``cost_analysis()`` counts loop bodies once and is reported only as a
+diagnostic. Collective bytes use the tpu-adjusted accounting
+(hlo._line_collective docstring). The memory term is a *matmul-traffic*
+bound (elementwise/norm traffic excluded; true HBM time is slightly
+higher on memory-bound cells).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params
+(MoE: shared + top_k/E of routed), D = processed tokens. The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat recompute, TP head padding, MoE
+capacity slack and attention FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+
+from repro.configs.common import SHAPES, applicable_shapes
+from repro.configs.registry import ARCHS, get_config
+from repro.models import lm
+from repro.nn import param as prm
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16e9
+
+
+def param_counts(cfg) -> dict:
+    """(total, active) params; active discounts non-routed experts."""
+    plan = lm.model_plan(cfg)
+    total = prm.count_params(plan)
+    expert = 0
+    for leaf in __import__("jax").tree_util.tree_leaves(
+            plan, is_leaf=prm.is_spec):
+        if prm.is_spec(leaf) and "experts" in leaf.axes:
+            expert += leaf.size
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    return {"total": total, "active": int(active)}
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """Assignment formula: 6*N_active*D (train), 2*N_active*D (inference),
+    global across chips."""
+    info = SHAPES[shape_name]
+    n_active = param_counts(cfg)["active"]
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        if cfg.family == "audio":
+            tokens = info["batch"] * (info["seq"] // cfg.dec_len_ratio)
+        return 6.0 * n_active * tokens
+    if info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        if cfg.family == "audio":
+            tokens = info["batch"] * (info["seq"] // cfg.dec_len_ratio)
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * info["batch"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    mesh: str
+    variant: str
+    ok: bool
+    n_devices: int = 0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    collective_raw_s: float = 0.0
+    model_flops: float = 0.0
+    hlo_flops_chip: float = 0.0
+    flops_ratio: float = 0.0      # MODEL / (HLO x chips)
+    hbm_gb: float = 0.0           # args + temp per device
+    fits: bool = True
+    dominant: str = ""
+    mitigation: str = ""
+    compile_s: float = 0.0
+    error: str = ""
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-FLOPs throughput / peak, at the modeled step time."""
+        if self.step_s <= 0 or self.n_devices == 0:
+            return 0.0
+        return (self.model_flops / self.n_devices / self.step_s) \
+            / PEAK_FLOPS
+
+
+MITIGATIONS = {
+    "compute": ("cut recompute (remat policy / fewer microbatch passes) "
+                "and head-padding waste; compute is already the right "
+                "place to be"),
+    "memory": ("raise arithmetic intensity: larger per-chip batch/tile, "
+               "fuse elementwise into matmuls, quantize weights (int8) "
+               "to halve weight traffic"),
+    "collective": ("re-shard: move batch over more axes / gather weights "
+                   "instead of activations (or vice versa), overlap "
+                   "collectives with compute (async schedule)"),
+}
+
+
+def analyse_record(rec: dict) -> Cell:
+    cell = Cell(arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+                variant=rec.get("variant", ""), ok=rec.get("ok", False),
+                n_devices=rec.get("n_devices", 0),
+                compile_s=rec.get("compile_s", 0.0),
+                error=rec.get("error", ""))
+    if not cell.ok:
+        return cell
+    cfg = get_config(rec["arch"])
+    cell.hlo_flops_chip = rec.get("hlo_dot_flops", 0.0)
+    cell.compute_s = cell.hlo_flops_chip / PEAK_FLOPS
+    cell.memory_s = rec.get("hlo_dot_bytes", 0.0) / HBM_BW
+    cell.collective_s = rec.get("collective_bytes_tpu", 0.0) / LINK_BW
+    cell.collective_raw_s = rec.get("collective_bytes", 0.0) / LINK_BW
+    cell.model_flops = model_flops(cfg, rec["shape"])
+    denom = cell.hlo_flops_chip * max(cell.n_devices, 1)
+    cell.flops_ratio = cell.model_flops / denom if denom else 0.0
+    mem = rec.get("memory", {})
+    cell.hbm_gb = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 1e9
+    # CPU-XLA upcasts bf16 activations to f32; TPU temp ~ half. Judge fit
+    # against the adjusted estimate, report both.
+    cell.fits = (mem.get("argument_size_in_bytes", 0)
+                 + mem.get("temp_size_in_bytes", 0) / 2) < HBM_BYTES
+    terms = {"compute": cell.compute_s, "memory": cell.memory_s,
+             "collective": cell.collective_s}
+    cell.dominant = max(terms, key=terms.get)
+    cell.mitigation = MITIGATIONS[cell.dominant]
+    return cell
+
+
+def load_cells(results_dir: str, variant: str | None = None) -> list:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if variant and rec.get("variant") != variant:
+            continue
+        cells.append(analyse_record(rec))
+    return cells
+
+
+def skipped_cells() -> list:
+    """Explicit SKIPPED rows so the 40-cell accounting is complete."""
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape not in applicable_shapes(cfg):
+                rows.append((arch, shape,
+                             "SKIPPED: full-attention arch; long_500k "
+                             "needs sub-quadratic attention (DESIGN.md)"))
+    return rows
+
+
+def markdown_table(cells: list, mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s "
+           "(raw) | dominant | MODEL/HLO | roofline frac | HBM GB/dev "
+           "| fits |\n|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape)):
+        if c.mesh != mesh:
+            continue
+        if not c.ok:
+            out.append(f"| {c.arch} | {c.shape} | FAILED: {c.error[:60]} "
+                       "| | | | | | | |\n")
+            continue
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3f} | "
+            f"{c.memory_s:.3f} | {c.collective_s:.3f} "
+            f"({c.collective_raw_s:.3f}) | **{c.dominant}** | "
+            f"{c.flops_ratio:.2f} | {c.roofline_fraction * 100:.1f}% | "
+            f"{c.hbm_gb:.1f} | {'yes' if c.fits else 'NO'} |\n")
+    for arch, shape, note in skipped_cells():
+        out.append(f"| {arch} | {shape} | {note} | | | | | | | |\n")
+    return "".join(out)

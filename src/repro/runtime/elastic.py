@@ -1,0 +1,43 @@
+"""Elastic scaling: replan the mesh around failed hosts and reshard from
+checkpoint.
+
+The checkpoint format is topology-free (see checkpoint.manager), so
+recovery is: pick the largest (data', model) grid buildable from the
+surviving devices — keeping the model axis if the survivor count allows,
+else degrading model parallelism to a divisor — rebuild shardings from
+the same logical rules, and device_put the restored arrays.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+def plan_mesh_shape(n_devices: int, model_pref: int = 16,
+                    pod: int | None = None) -> tuple:
+    """Largest (data, model) grid with model | model_pref, data maximal."""
+    model = model_pref
+    while model > 1 and n_devices % model:
+        model //= 2
+    data = n_devices // model
+    if pod and pod > 1 and data % pod == 0:
+        return (pod, data // pod, model), ("pod", "data", "model")
+    return (data, model), ("data", "model")
+
+
+def replan(devices, model_pref: int = 16) -> Mesh:
+    shape, axes = plan_mesh_shape(len(devices), model_pref)
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def recover(ckpt_manager, template, devices, plan, rules=None,
+            model_pref: int = 16):
+    """Full recovery path: new mesh from survivors + restore resharded.
+
+    Returns (mesh, restored_tree, meta)."""
+    from repro.distributed import sharding as shd
+    mesh = replan(devices, model_pref)
+    shardings = shd.plan_shardings(plan, mesh, rules)
+    tree, meta = ckpt_manager.restore(template, shardings=shardings)
+    return mesh, tree, meta

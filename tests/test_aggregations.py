@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis) for the paper's partial aggregations:
+permutation invariance, Welford == two-pass variance, streaming == segment
+forms, and degree-table correctness."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregations as A
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+floats = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+@st.composite
+def neighbor_sets(draw):
+    n = draw(st.integers(1, 12))
+    dim = draw(st.integers(1, 5))
+    xs = draw(st.lists(st.lists(floats, min_size=dim, max_size=dim),
+                       min_size=n, max_size=n))
+    return np.array(xs, np.float32)
+
+
+@given(neighbor_sets(), st.permutations(range(5)),
+       st.sampled_from(A.AGGREGATIONS))
+def test_permutation_invariance(xs, perm5, agg):
+    perm = np.argsort(np.resize(perm5, len(xs)) + np.arange(len(xs)) * 0.1)
+    a = A.aggregate_stream(agg, jnp.asarray(xs))
+    b = A.aggregate_stream(agg, jnp.asarray(xs[perm]))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@given(neighbor_sets())
+def test_welford_equals_two_pass(xs):
+    got = np.asarray(A.aggregate_stream("var", jnp.asarray(xs)))
+    want = xs.var(axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(neighbor_sets(), st.sampled_from(A.AGGREGATIONS))
+def test_stream_equals_segment(xs, agg):
+    """Streaming (kernel) form == segment (XLA) form on one segment."""
+    n = len(xs)
+    seg = jnp.zeros((n,), jnp.int32)
+    got = A.segment_aggregate(agg, jnp.asarray(xs), seg, 1)[0]
+    want = A.aggregate_stream(agg, jnp.asarray(xs))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(2, 20), st.integers(1, 40), st.integers(0, 10**6))
+def test_degrees_match_numpy(n, e, seed):
+    rng = np.random.default_rng(seed)
+    ei = np.full((e + 4, 2), -1, np.int32)
+    ei[:e, 0] = rng.integers(0, n, e)
+    ei[:e, 1] = rng.integers(0, n, e)
+    indeg, outdeg = A.degrees(jnp.asarray(ei), n)
+    want_in = np.bincount(ei[:e, 1], minlength=n)
+    want_out = np.bincount(ei[:e, 0], minlength=n)
+    np.testing.assert_array_equal(np.asarray(indeg), want_in)
+    np.testing.assert_array_equal(np.asarray(outdeg), want_out)
+
+
+def test_segment_padding_dropped():
+    msgs = jnp.ones((4, 2), jnp.float32)
+    seg = jnp.array([0, 0, 1, 1], jnp.int32)
+    valid = jnp.array([True, True, True, False])
+    out = A.segment_aggregate("sum", msgs, seg, 2, valid)
+    np.testing.assert_allclose(out, [[2, 2], [1, 1]])

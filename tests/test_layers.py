@@ -1,0 +1,139 @@
+"""Layer-level numerics: chunked attention vs dense reference, chunked
+cross-entropy vs full softmax, norms, rope, MoE routing properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import moe as MOE
+from repro.nn import param as prm
+
+RNG = np.random.default_rng(7)
+
+
+def test_online_attention_matches_dense():
+    b, h, s, d = 2, 3, 64, 16
+    q = jnp.asarray(RNG.standard_normal((b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, h, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, h, s, d)), jnp.float32)
+    got = A.online_attention(q, k, v, causal=True, chunk=16)
+    # dense reference
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) * d ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask, sc, -1e30)
+    want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_online_attention_ragged_chunk():
+    b, h, s, d = 1, 2, 50, 8     # 50 % 16 != 0 -> padding path
+    q = jnp.asarray(RNG.standard_normal((b, h, s, d)), jnp.float32)
+    k, v = q + 0.1, q - 0.1
+    got = A.online_attention(q, k, v, causal=False, chunk=16)
+    sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) * d ** -0.5
+    want = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_xent_matches_full():
+    b, s, d, v = 2, 32, 8, 50
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((d, v)), jnp.float32)
+    labels = jnp.asarray(RNG.integers(0, v, (b, s)), jnp.int32)
+    loss_c, _ = L.chunked_softmax_xent(x, w, labels, chunk=8)
+    logits = x @ w
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.mean(logz - gold)
+    np.testing.assert_allclose(float(loss_c), float(want), rtol=1e-5)
+
+
+def test_chunked_xent_mask():
+    b, s, d, v = 1, 16, 4, 11
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((d, v)), jnp.float32)
+    labels = jnp.zeros((b, s), jnp.int32)
+    mask = jnp.zeros((b, s)).at[:, :4].set(1.0)
+    loss_m, wsum = L.chunked_softmax_xent(x, w, labels, chunk=8,
+                                          label_mask=mask)
+    assert float(wsum) == 4.0
+    loss_f, _ = L.chunked_softmax_xent(x[:, :4], w, labels[:, :4], chunk=4)
+    np.testing.assert_allclose(float(loss_m), float(loss_f), rtol=1e-5)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    s, d = 16, 8
+    x = jnp.asarray(RNG.standard_normal((s, d)), jnp.float32)
+    pos = jnp.arange(s)
+    y = A.rope(x, pos, 10000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # dot products depend only on relative positions
+    q = jnp.ones((1, d), jnp.float32)
+    k = jnp.ones((1, d), jnp.float32)
+    d1 = A.rope(q, jnp.array([3]), 1e4) @ A.rope(k, jnp.array([5]), 1e4).T
+    d2 = A.rope(q, jnp.array([10]), 1e4) @ A.rope(k, jnp.array([12]), 1e4).T
+    np.testing.assert_allclose(d1, d2, rtol=1e-4)
+
+
+def test_rmsnorm_scale_invariance_of_direction():
+    x = jnp.asarray(RNG.standard_normal((4, 16)), jnp.float32)
+    p = {"scale": jnp.ones((16,), jnp.float32)}
+    y1, y2 = L.rmsnorm(p, x), L.rmsnorm(p, 3.0 * x)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------ MoE --
+def _moe_setup(e=4, k=2, d=16, f=32, b=2, s=16, cap_factor=8.0):
+    cfg = MOE.MoEConfig(d_model=d, num_experts=e, top_k=k, d_ff_expert=f,
+                        capacity_factor=cap_factor)
+    plan = MOE.moe_plan(cfg, jnp.float32)
+    params = prm.materialize(plan, jax.random.key(0))
+    x = jnp.asarray(RNG.standard_normal((b, s, d)), jnp.float32)
+    return cfg, params, x
+
+
+def test_moe_high_capacity_matches_dense_dispatch():
+    """With capacity >= S, no tokens drop: output == explicit per-token
+    weighted sum over the top-k experts."""
+    cfg, params, x = _moe_setup()
+    y, aux = MOE.moe_forward(params, x, cfg)
+
+    gates = x @ params["router"]
+    probs = jax.nn.softmax(gates, -1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / topv.sum(-1, keepdims=True)
+
+    def expert(ei, xt):
+        h = (xt @ params["w_up"][ei]) * jax.nn.silu(
+            xt @ params["w_gate"][ei])
+        return h @ params["w_down"][ei]
+
+    want = jnp.zeros_like(x)
+    for bi in range(x.shape[0]):
+        for si in range(x.shape[1]):
+            acc = jnp.zeros((cfg.d_model,))
+            for kk in range(cfg.top_k):
+                e = int(topi[bi, si, kk])
+                acc += topv[bi, si, kk] * expert(e, x[bi, si])
+            want = want.at[bi, si].set(acc)
+    np.testing.assert_allclose(y, want, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_overflow():
+    cfg, params, x = _moe_setup(cap_factor=0.5)
+    y, _ = MOE.moe_forward(params, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_aux_loss_balanced_router_is_low():
+    """A uniform router gives aux ~= num_experts * k/E * ... ~ k."""
+    cfg, params, x = _moe_setup()
+    params = dict(params, router=jnp.zeros_like(params["router"]))
+    _, aux = MOE.moe_forward(params, x, cfg)
+    assert float(aux) <= cfg.top_k + 0.3

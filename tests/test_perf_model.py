@@ -1,0 +1,63 @@
+"""Direct-fit performance model (numpy random forest) tests."""
+import numpy as np
+
+from repro.core import perf_model as PM
+from repro.core import dse
+
+
+def _toy_data(n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, (n, 5))
+    y = 3 * x[:, 0] + np.sin(4 * x[:, 1]) + (x[:, 2] > 0.5) * 2 \
+        + rng.normal(0, 0.05, n)
+    return x, y
+
+
+def test_tree_beats_mean_predictor():
+    x, y = _toy_data()
+    tree = PM.DecisionTreeRegressor(max_depth=8).fit(x[:150], y[:150])
+    pred = tree.predict(x[150:])
+    sse_tree = np.mean((pred - y[150:]) ** 2)
+    sse_mean = np.mean((y[150:].mean() - y[150:]) ** 2)
+    assert sse_tree < 0.3 * sse_mean
+
+
+def test_forest_beats_single_tree_generalization():
+    x, y = _toy_data(300)
+    tree = PM.DecisionTreeRegressor(max_depth=14, min_samples_leaf=1)
+    forest = PM.RandomForestRegressor(n_estimators=10, max_depth=14,
+                                      min_samples_leaf=1)
+    tree.fit(x[:200], y[:200])
+    forest.fit(x[:200], y[:200])
+    e_tree = np.mean((tree.predict(x[200:]) - y[200:]) ** 2)
+    e_forest = np.mean((forest.predict(x[200:]) - y[200:]) ** 2)
+    assert e_forest <= e_tree * 1.2
+
+
+def test_mape():
+    assert PM.mape([100, 200], [110, 180]) == 10.0
+    assert PM.mape([50], [50]) == 0.0
+
+
+def test_kfold_cv_runs():
+    x, y = _toy_data(120)
+    score = PM.kfold_cv_mape(x, np.abs(y) + 1.0, k=5)
+    assert 0 < score < 100
+
+
+def test_feature_vector_shape():
+    rng = np.random.default_rng(0)
+    d = dse.sample_design(rng)
+    f = PM.features(d)
+    assert f.shape == (len(PM.FEATURE_NAMES),)
+    assert f[:4].sum() == 1.0    # one-hot conv type
+
+
+def test_design_space_size_and_config_build():
+    assert dse.space_size() > 100_000   # paper: too large for brute force
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        d = dse.sample_design(rng)
+        cfg = dse.design_to_config(d)
+        assert cfg.gnn_conv == d["conv"]
+        assert cfg.mlp_head.in_dim == d["gnn_out_dim"] * 3

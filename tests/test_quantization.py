@@ -1,0 +1,53 @@
+"""Fixed-point (FPX) quantization properties."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import FPX, quantize, quantize_tree
+
+settings.register_profile("fast", max_examples=50, deadline=None)
+settings.load_profile("fast")
+
+fpx_strategy = st.builds(
+    FPX,
+    w=st.sampled_from([8, 16, 24, 32]),
+    i=st.integers(2, 8),
+)
+
+
+@given(st.floats(-100, 100, allow_nan=False, width=32), fpx_strategy)
+def test_quantize_idempotent(x, fpx):
+    q1 = float(quantize(jnp.float32(x), fpx))
+    q2 = float(quantize(jnp.float32(q1), fpx))
+    assert q1 == q2
+
+
+@given(st.floats(-1.875, 1.875, allow_nan=False, width=32), fpx_strategy)
+def test_error_bounded_by_half_resolution(x, fpx):
+    if abs(x) > fpx.max_val:
+        return
+    q = float(quantize(jnp.float32(x), fpx))
+    # emulation runs in f32: allow f32 rounding noise on very fine grids
+    bound = max(fpx.resolution / 2, abs(x) * 2 ** -22) + 1e-9
+    assert abs(q - x) <= bound
+
+
+@given(st.floats(-1e6, 1e6, allow_nan=False), fpx_strategy)
+def test_saturation(x, fpx):
+    q = float(quantize(jnp.float32(x), fpx))
+    slack = max(fpx.resolution, abs(fpx.max_val) * 2 ** -22)
+    assert fpx.min_val - slack <= q <= fpx.max_val + slack
+
+
+def test_quantize_tree_skips_ints():
+    tree = {"w": jnp.ones((3,), jnp.float32) * 0.123456,
+            "idx": jnp.arange(3, dtype=jnp.int32)}
+    out = quantize_tree(tree, FPX(8, 4))
+    assert out["idx"].dtype == jnp.int32
+    assert float(out["w"][0]) != 0.123456  # actually quantized
+
+
+def test_paper_formats():
+    assert FPX(32, 16).frac_bits == 16
+    assert FPX(16, 10).resolution == 2 ** -6
+    assert str(FPX(16, 10)) == "fpx<16,10>"
