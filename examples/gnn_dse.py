@@ -30,7 +30,12 @@ t0 = time.time()
 best = dse.explore(models, n_candidates=4096, seed=1)
 print(f"explored 4096 candidates in {time.time() - t0:.3f}s "
       f"({best['ms_per_eval']:.2f} ms/eval)")
-print("best design under the HBM budget:")
+print("best design under the HBM budget"
+      + ("" if best["feasible"] else " (NONE FIT — best infeasible)") + ":")
 for k in ("conv", "gnn_hidden_dim", "gnn_layers", "gnn_p_hidden",
-          "gnn_p_out", "pred_latency_s", "pred_hbm_bytes"):
+          "gnn_p_out", "batch_graphs", "node_budget", "edge_budget",
+          "pred_latency_s", "pred_hbm_bytes"):
     print(f"  {k}: {best[k]}")
+if "pred_graphs_per_s" in best:
+    print(f"  pred_graphs_per_s: {best['pred_graphs_per_s']:.0f} "
+          f"(packed-batch throughput model)")

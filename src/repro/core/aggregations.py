@@ -117,6 +117,21 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
     return out[:num_segments]
 
 
+def segment_counts(seg_ids, num_segments: int, valid=None):
+    """Per-segment element counts: (E,) int ids -> (num_segments,) float.
+
+    With packed GraphBatch buffers this yields per-graph node or edge
+    counts (pass node_graph_id / edge_graph_id); padding slots carry
+    seg_ids == num_segments and fall into the dropped overflow bucket.
+    """
+    seg_ids = jnp.asarray(seg_ids)
+    if valid is not None:
+        seg_ids = jnp.where(valid, seg_ids, num_segments)
+    ones = jnp.ones(seg_ids.shape, jnp.float32)
+    return jax.ops.segment_sum(ones, seg_ids, num_segments + 1)[
+        :num_segments]
+
+
 def degrees(edge_index, num_nodes: int, valid=None):
     """(in_degree, out_degree) from padded COO (E, 2) with -1 padding."""
     src, dst = edge_index[:, 0], edge_index[:, 1]

@@ -8,6 +8,12 @@ Kernels: GCN [23], GraphSAGE [24], GIN(E) [26], PNA [27] — the paper's
 Table II set. Each provides ``plan(cfg)`` + ``apply(params, g, x)``, where
 ``g`` is a dict {edge_index (E,2), edge_feat (E,Fe), num_nodes, in_deg,
 out_deg, valid_e} with static max shapes (MAX_NODES/MAX_EDGES analogue).
+
+The same applies serve both execution formats: a single padded graph and
+a packed GraphBatch (many graphs in one flat buffer). A packed batch is
+just the disjoint union graph — edge_index holds *global* node ids, so
+message passing never crosses graph boundaries and the segment reductions
+drop padding edges (src == -1) via ``valid_e``.
 """
 from __future__ import annotations
 
@@ -42,6 +48,11 @@ def _gather(x, idx):
     return jnp.take(x, jnp.maximum(idx, 0), axis=0)
 
 
+def edge_endpoints(g):
+    """(src, dst) columns of the padded COO edge buffer; -1 on padding."""
+    return g["edge_index"][:, 0], g["edge_index"][:, 1]
+
+
 # ------------------------------------------------------------------ GCN --
 def gcn_plan(cfg: ConvConfig, dtype=jnp.float32):
     return {"w": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
@@ -50,7 +61,7 @@ def gcn_plan(cfg: ConvConfig, dtype=jnp.float32):
 
 def gcn_apply(params, g, x, cfg: ConvConfig):
     """x' = W (sum_u x_u / sqrt(d_u d_v)) + b  (self loops included)."""
-    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    src, dst = edge_endpoints(g)
     n = x.shape[0]
     deg = g["in_deg"] + 1.0                       # +1 for self loop
     inv = jax.lax.rsqrt(jnp.maximum(deg, 1e-12))
@@ -72,7 +83,7 @@ def sage_plan(cfg: ConvConfig, dtype=jnp.float32):
 
 def sage_apply(params, g, x, cfg: ConvConfig):
     """x' = W1 x_v + W2 mean_u(x_u)  (flexible aggregation family)."""
-    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    src, dst = edge_endpoints(g)
     msg = _gather(x, src)
     aggr = agg_mod.segment_aggregate("mean", msg, dst, x.shape[0],
                                      g["valid_e"])
@@ -98,7 +109,7 @@ def gin_plan(cfg: ConvConfig, dtype=jnp.float32):
 def gin_apply(params, g, x, cfg: ConvConfig):
     """x' = MLP((1+eps) x_v + sum_u relu(x_u + W_e e_uv)) — edge features
     make this inexpressible as SpMM (paper Table II)."""
-    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    src, dst = edge_endpoints(g)
     msg = _gather(x, src)
     if "w_edge" in params:
         msg = jax.nn.relu(msg + linear(params["w_edge"], g["edge_feat"]))
@@ -126,7 +137,7 @@ def pna_plan(cfg: ConvConfig, dtype=jnp.float32):
 def pna_apply(params, g, x, cfg: ConvConfig):
     """Principal Neighbourhood Aggregation: message MLP phi(x_v, x_u, e),
     4 aggregators x 3 degree scalers, then gamma on [x_v ; towers]."""
-    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    src, dst = edge_endpoints(g)
     n = x.shape[0]
     h_src = _gather(x, src)
     h_dst = _gather(x, dst)

@@ -10,7 +10,9 @@ under a resource constraint — the paper's seconds-vs-days DSE claim.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import logging
 import time
 
 import numpy as np
@@ -18,9 +20,13 @@ import numpy as np
 from repro.core import gnn_model as G
 from repro.core import perf_model as PM
 from repro.core.project import Project, TPUTarget
-from repro.data.pipeline import GraphDataConfig
+from repro.data.pipeline import GraphDataConfig, size_budget
 
-# Listing 2 (paper) design space
+log_ = logging.getLogger(__name__)
+
+# Listing 2 (paper) design space, extended with the packed-batch budget
+# axis (batch_graphs sizes the GraphBatch node/edge buffers — the on-chip
+# working-set knob the fitted models learn throughput against).
 SPACE = {
     "conv": ["gcn", "gin", "pna", "sage"],
     "gnn_hidden_dim": [64, 128, 256],
@@ -35,6 +41,7 @@ SPACE = {
     "mlp_p_in": [2, 4, 8],
     "mlp_p_hidden": [2, 4, 8],
     "mlp_p_out": [1],
+    "batch_graphs": [8, 16, 32, 64],
 }
 
 
@@ -52,7 +59,17 @@ def sample_design(rng, *, in_dim: int = 9, edge_dim: int = 3,
     d.update(in_dim=in_dim, edge_dim=edge_dim, avg_nodes=avg_nodes,
              avg_edges=avg_edges, avg_degree=avg_degree, out_dim=out_dim,
              fpx_bits=32)
+    d["node_budget"] = size_budget(d["batch_graphs"], avg_nodes)
+    d["edge_budget"] = size_budget(d["batch_graphs"], avg_edges)
     return d
+
+
+def design_name(d: dict) -> str:
+    """Stable build-dir name: sha1 of the sorted design items, so cached
+    reports are reproducible across processes (PYTHONHASHSEED-proof)."""
+    digest = hashlib.sha1(
+        repr(sorted(d.items())).encode("utf-8")).hexdigest()
+    return f"dse_{digest[:12]}"
 
 
 def design_to_config(d: dict) -> G.GNNModelConfig:
@@ -83,15 +100,16 @@ def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
     """One 'synthesis run': compile + report (+ optional measured runtime)."""
     cfg = design_to_config(d)
     proj = Project(
-        f"dse_{abs(hash(tuple(sorted(d.items())))) % 10**8}", cfg, "dse",
-        build_dir,
+        design_name(d), cfg, "dse", build_dir,
         dataset_cfg=GraphDataConfig(node_feat_dim=d["in_dim"],
                                     edge_feat_dim=d["edge_dim"],
                                     max_nodes=max_nodes,
                                     max_edges=max_edges),
         max_nodes=max_nodes, max_edges=max_edges,
         num_nodes_guess=d["avg_nodes"], num_edges_guess=d["avg_edges"],
-        degree_guess=d["avg_degree"])
+        degree_guess=d["avg_degree"],
+        batch_graphs=d.get("batch_graphs", 32),
+        node_budget=d.get("node_budget"), edge_budget=d.get("edge_budget"))
     proj.gen_hw_model()
     report = proj.run_synthesis()
     out = dict(d)
@@ -99,6 +117,8 @@ def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
     out["hbm_bytes"] = report["hbm_total_bytes"]
     out["flops"] = report["flops"]
     out["compile_s"] = report["compile_s"]
+    out["graphs_per_s"] = report["packed"]["graphs_per_s"]
+    out["packed_latency_s"] = report["packed"]["latency_s"]
     if run_testbench:
         proj.init_params()
         proj.gen_testbench(tb_graphs)
@@ -126,42 +146,79 @@ def build_database(n: int, build_dir: str, seed: int = 0,
 class FittedModels:
     latency: PM.RandomForestRegressor
     memory: PM.RandomForestRegressor
+    throughput: PM.RandomForestRegressor | None = None
 
     def predict(self, designs: list) -> tuple:
         x = np.stack([PM.features(d) for d in designs])
         return self.latency.predict(x), self.memory.predict(x)
 
+    def predict_throughput(self, designs: list):
+        if self.throughput is None:
+            return None
+        x = np.stack([PM.features(d) for d in designs])
+        return self.throughput.predict(x)
+
 
 def fit_models(db: list, latency_key: str = "latency_s",
-               memory_key: str = "hbm_bytes") -> FittedModels:
+               memory_key: str = "hbm_bytes",
+               throughput_key: str = "graphs_per_s") -> FittedModels:
     x = np.stack([PM.features(d) for d in db])
     lat = PM.RandomForestRegressor().fit(
         x, np.array([d[latency_key] for d in db]))
     mem = PM.RandomForestRegressor().fit(
         x, np.array([d[memory_key] for d in db]))
-    return FittedModels(lat, mem)
+    thr = None
+    if all(throughput_key in d for d in db):
+        # batch-budget features let the forest learn packed throughput
+        thr = PM.RandomForestRegressor().fit(
+            x, np.array([d[throughput_key] for d in db]))
+    return FittedModels(lat, mem, thr)
 
 
 def explore(models: FittedModels, n_candidates: int = 4096, seed: int = 1,
             memory_budget: float = TPUTarget().hbm_bytes,
             base: dict | None = None) -> dict:
     """Random-sample the space, predict in milliseconds, return the best
-    latency design under the memory constraint (paper DSE loop)."""
+    latency design under the memory constraint (paper DSE loop).
+
+    Fails soft: when no candidate fits the budget, the best-latency
+    infeasible design is returned flagged ``feasible: False`` with its
+    violation margin, instead of raising.
+    """
     rng = np.random.default_rng(seed)
     cands = []
     for _ in range(n_candidates):
         d = sample_design(rng, **(base or {}))
         cands.append(d)
     t0 = time.time()
-    lat, mem = models.predict(cands)
+    x = np.stack([PM.features(d) for d in cands])   # featurize once
+    lat = models.latency.predict(x)
+    mem = models.memory.predict(x)
+    thr = models.throughput.predict(x) if models.throughput is not None \
+        else None
     elapsed = time.time() - t0
+
+    def result(i, feasible):
+        best = dict(cands[i])
+        best["pred_latency_s"] = float(lat[i])
+        best["pred_hbm_bytes"] = float(mem[i])
+        if thr is not None:
+            best["pred_graphs_per_s"] = float(thr[i])
+        best["dse_seconds"] = elapsed
+        best["ms_per_eval"] = elapsed / n_candidates * 1e3
+        best["feasible"] = feasible
+        return best
+
     order = np.argsort(lat)
     for i in order:
         if mem[i] <= memory_budget:
-            best = dict(cands[i])
-            best["pred_latency_s"] = float(lat[i])
-            best["pred_hbm_bytes"] = float(mem[i])
-            best["dse_seconds"] = elapsed
-            best["ms_per_eval"] = elapsed / n_candidates * 1e3
-            return best
-    raise RuntimeError("no design fits the memory budget")
+            return result(i, True)
+    i = order[0]
+    violation = float(mem[i] - memory_budget)
+    log_.warning(
+        "no design fits the memory budget (%.3g B); returning best "
+        "infeasible design, violation margin %.3g B", memory_budget,
+        violation)
+    best = result(i, False)
+    best["memory_violation_bytes"] = violation
+    return best

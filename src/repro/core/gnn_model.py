@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import convs as C
 from repro.core import quantization as Q
-from repro.core.pooling import global_pooling
+from repro.core.pooling import global_pooling, segment_global_pooling
 from repro.nn.layers import act, linear, linear_plan
 
 
@@ -126,13 +126,35 @@ def graph_inputs(batch_el: dict) -> tuple:
     return g, x, node_mask
 
 
-def apply(params, cfg: GNNModelConfig, batch_el: dict,
-          quant: Q.FPX | None = None):
-    """Forward one padded graph. quant != None reproduces the fixed-point
-    testbench semantics (weights are pre-quantized by the caller)."""
-    g, x, node_mask = graph_inputs(batch_el)
-    if quant is not None:
-        x = Q.quantize(x, quant)
+def packed_to_device(batch: dict) -> dict:
+    """Host GraphBatch -> device arrays, stripping the host-only target
+    buffer ``y`` so it is never traced into the inference program."""
+    return {k: jnp.asarray(v) for k, v in batch.items() if k != "y"}
+
+
+def packed_inputs(batch: dict) -> tuple:
+    """Unpack a packed GraphBatch {node_feat (N,F), node_graph_id (N,),
+    edge_index (E,2) global ids, edge_feat, graph_valid (G,)} into
+    (g, x, node_mask, graph_id). The packed batch is the disjoint union
+    graph, so the same conv applies run on it unchanged."""
+    x = batch["node_feat"]
+    graph_id = batch["node_graph_id"]
+    num_graphs = batch["graph_valid"].shape[0]
+    node_mask = graph_id < num_graphs
+    edge_index = batch["edge_index"]
+    valid_e = edge_index[:, 0] >= 0
+    from repro.core.aggregations import degrees
+    indeg, outdeg = degrees(edge_index, x.shape[0], valid_e)
+    g = {"edge_index": edge_index, "edge_feat": batch.get("edge_feat"),
+         "valid_e": valid_e, "in_deg": indeg, "out_deg": outdeg,
+         "num_nodes": jnp.sum(node_mask.astype(jnp.int32))}
+    return g, x, node_mask, graph_id
+
+
+def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
+              quant: Q.FPX | None):
+    """Conv stack + activation + skip, shared by the padded per-graph
+    oracle (`apply`) and the packed batch path (`apply_packed`)."""
     for i in range(cfg.gnn_num_layers):
         cc = cfg.conv_cfg(i)
         h = C.conv_apply(params["convs"][f"c{i}"], g, x, cc)
@@ -147,9 +169,47 @@ def apply(params, cfg: GNNModelConfig, batch_el: dict,
         x = x * node_mask[:, None]
         if quant is not None:
             x = Q.quantize(x, quant)
+    return x
+
+
+def apply(params, cfg: GNNModelConfig, batch_el: dict,
+          quant: Q.FPX | None = None):
+    """Forward one padded graph. quant != None reproduces the fixed-point
+    testbench semantics (weights are pre-quantized by the caller)."""
+    g, x, node_mask = graph_inputs(batch_el)
+    if quant is not None:
+        x = Q.quantize(x, quant)
+    x = _backbone(params, cfg, g, x, node_mask, quant)
     if cfg.task == "node":
         return x
     pooled = global_pooling(cfg.global_pooling, x, node_mask)
+    if quant is not None:
+        pooled = Q.quantize(pooled, quant)
+    out = mlp_head_apply(params["mlp"], pooled.astype(x.dtype),
+                         cfg.mlp_head, quant)
+    if cfg.output_activation:
+        out = act(cfg.output_activation)(out)
+    return out
+
+
+def apply_packed(params, cfg: GNNModelConfig, batch: dict,
+                 quant: Q.FPX | None = None):
+    """Forward a packed GraphBatch — all graphs in one XLA program.
+
+    Returns (num_graphs, out_dim) for graph tasks (rows where
+    ``graph_valid`` is False are padding) or the (N_total, F) node
+    embeddings for node tasks. Matches per-graph ``apply`` outputs to
+    fp32 tolerance; `apply` stays the single-graph oracle.
+    """
+    g, x, node_mask, graph_id = packed_inputs(batch)
+    num_graphs = batch["graph_valid"].shape[0]
+    if quant is not None:
+        x = Q.quantize(x, quant)
+    x = _backbone(params, cfg, g, x, node_mask, quant)
+    if cfg.task == "node":
+        return x
+    pooled = segment_global_pooling(cfg.global_pooling, x, graph_id,
+                                    num_graphs, node_mask)
     if quant is not None:
         pooled = Q.quantize(pooled, quant)
     out = mlp_head_apply(params["mlp"], pooled.astype(x.dtype),
@@ -169,3 +229,13 @@ def apply_batch(params, cfg: GNNModelConfig, batch: dict,
 def mse_loss(params, cfg: GNNModelConfig, batch: dict):
     pred = apply_batch(params, cfg, batch)
     return jnp.mean(jnp.square(pred - batch["y"]))
+
+
+def mse_loss_packed(params, cfg: GNNModelConfig, batch: dict):
+    """MSE over the valid graphs of a packed batch (padding rows masked)."""
+    pred = apply_packed(params, cfg,
+                        {k: v for k, v in batch.items() if k != "y"})
+    w = batch["graph_valid"].astype(pred.dtype)[:, None]
+    se = jnp.square(pred - batch["y"]) * w
+    denom = jnp.maximum(jnp.sum(w) * pred.shape[-1], 1.0)
+    return jnp.sum(se) / denom

@@ -44,28 +44,35 @@ class DecisionTreeRegressor:
         return self
 
     def _best_split(self, x, y):
+        """Vectorized SSE scan: prefix sums over the sorted targets give
+        every split position's left/right SSE in one NumPy expression
+        (same splits and trees as the scalar loop it replaced)."""
         n, d = x.shape
         feats = np.arange(d)
         if self.max_features:
             k = max(1, int(d * self.max_features))
             feats = self.rng.choice(d, size=k, replace=False)
         best = (None, None, np.inf)
+        ml = self.min_samples_leaf
+        idx = np.arange(ml, n - ml + 1)
+        if len(idx) == 0:
+            return best
         for f in feats:
             order = np.argsort(x[:, f], kind="stable")
             xs, ys = x[order, f], y[order]
             csum = np.cumsum(ys)
             csq = np.cumsum(ys * ys)
             total, total_sq = csum[-1], csq[-1]
-            ml = self.min_samples_leaf
-            for i in range(ml, n - ml + 1):
-                if xs[i - 1] == xs[min(i, n - 1)]:
-                    continue
-                sl, sl2 = csum[i - 1], csq[i - 1]
-                nl, nr = i, n - i
-                sse = (sl2 - sl * sl / nl) \
-                    + ((total_sq - sl2) - (total - sl) ** 2 / nr)
-                if sse < best[2]:
-                    best = (f, (xs[i - 1] + xs[min(i, n - 1)]) / 2, sse)
+            sl, sl2 = csum[idx - 1], csq[idx - 1]
+            nl, nr = idx, n - idx
+            sse = (sl2 - sl * sl / nl) \
+                + ((total_sq - sl2) - (total - sl) ** 2 / nr)
+            # splits between equal feature values are not realizable
+            sse = np.where(xs[idx - 1] == xs[idx], np.inf, sse)
+            j = int(np.argmin(sse))
+            if sse[j] < best[2]:
+                i = idx[j]
+                best = (int(f), (xs[i - 1] + xs[i]) / 2, float(sse[j]))
         return best
 
     def _build(self, x, y, depth):
@@ -156,11 +163,15 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     "mlp_p_in", "mlp_p_hidden", "mlp_p_out",
     "in_dim", "edge_dim", "avg_nodes", "avg_edges", "avg_degree",
     "fpx_bits",
+    # packed GraphBatch budget axis (predicting packed throughput)
+    "batch_graphs", "node_budget", "edge_budget",
 ]
 
 
 def features(design: dict) -> np.ndarray:
-    """Design-point dict (see dse.sample_design) -> feature vector."""
+    """Design-point dict (see dse.sample_design) -> feature vector.
+    Batch-budget fields default to the single-graph setting so databases
+    recorded before the packed-batch refactor still featurize."""
     onehot = [1.0 if design["conv"] == c else 0.0 for c in CONV_TYPES]
     return np.array(onehot + [
         design["gnn_hidden_dim"], design["gnn_out_dim"],
@@ -171,4 +182,7 @@ def features(design: dict) -> np.ndarray:
         design["in_dim"], design["edge_dim"],
         design["avg_nodes"], design["avg_edges"], design["avg_degree"],
         design.get("fpx_bits", 32),
+        design.get("batch_graphs", 1),
+        design.get("node_budget", design["avg_nodes"]),
+        design.get("edge_budget", design["avg_edges"]),
     ], dtype=float)

@@ -1,11 +1,22 @@
 """Global graph pooling (paper §V-B): sum / mean / max over valid nodes,
 multiple methods combined by concatenation (GlobalPooling(["add","mean",
-"max"]) in the paper's API)."""
+"max"]) in the paper's API).
+
+Two forms, matching the two execution formats:
+* ``global_pool(ing)`` — one padded graph, masked dense reduction -> (F,).
+* ``segment_global_pool(ing)`` — a packed GraphBatch, ``segment_*``
+  reduction keyed by per-node graph_id -> (num_graphs, F). Empty or
+  fully-padded graphs zero-fill, identical to the dense form.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.aggregations import segment_aggregate
+
 POOLINGS = ("add", "sum", "mean", "max")
+
+_SEGMENT_AGG = {"add": "sum", "sum": "sum", "mean": "mean", "max": "max"}
 
 
 def global_pool(kind: str, x, node_mask):
@@ -26,3 +37,22 @@ def global_pool(kind: str, x, node_mask):
 def global_pooling(kinds, x, node_mask):
     """Concatenation of pooling methods -> (len(kinds) * F,)."""
     return jnp.concatenate([global_pool(k, x, node_mask) for k in kinds])
+
+
+def segment_global_pool(kind: str, x, graph_id, num_graphs: int,
+                        node_valid=None):
+    """x: (N_total, F) packed nodes; graph_id: (N_total,) int32 ->
+    (num_graphs, F). Padding slots (graph_id == num_graphs) are dropped."""
+    if kind not in _SEGMENT_AGG:
+        raise ValueError(kind)
+    return segment_aggregate(_SEGMENT_AGG[kind], x, graph_id, num_graphs,
+                             node_valid)
+
+
+def segment_global_pooling(kinds, x, graph_id, num_graphs: int,
+                           node_valid=None):
+    """Concatenated pooling over a packed batch -> (num_graphs,
+    len(kinds) * F)."""
+    return jnp.concatenate(
+        [segment_global_pool(k, x, graph_id, num_graphs, node_valid)
+         for k in kinds], axis=-1)

@@ -6,10 +6,14 @@ Stage mapping (DESIGN.md §2):
                                 inference program (HLS codegen analogue)
   gen_testbench()            -> export dataset + float reference outputs
   build_and_run_testbench()  -> run the program over the dataset, report
-                                MAE (fixed vs float) + measured runtime
+                                MAE (fixed vs float) + measured runtime;
+                                also drains the packed GraphBatch path
+                                and reports throughput in graphs/s
   run_synthesis()            -> compile, then emit the synthesis report:
                                 roofline latency, FLOPs, HBM/VMEM bytes
-                                (the Vitis latency/BRAM report analogue)
+                                (the Vitis latency/BRAM report analogue),
+                                plus the packed-batch program's modeled
+                                graphs/s under the node/edge budget
 All artifacts land in ``build_dir`` (config.json, report.json, HLO text),
 the analogue of the HLS project directory.
 """
@@ -53,7 +57,9 @@ class Project:
                  num_edges_guess: float = 38, degree_guess: float = 2.1,
                  float_or_fixed: str = "float", fpx: Q.FPX = Q.FPX(32, 16),
                  target: TPUTarget = TPUTarget(), n_jobs: int = 1,
-                 seed: int = 0):
+                 seed: int = 0, batch_graphs: int = 32,
+                 node_budget: int | None = None,
+                 edge_budget: int | None = None):
         self.name = name
         self.cfg = model_cfg
         self.task = task
@@ -71,7 +77,16 @@ class Project:
         self.fpx = fpx
         self.target = target
         self.seed = seed
+        # packed GraphBatch execution budgets (DESIGN_BATCHING.md): the
+        # flat buffers hold ~batch_graphs average graphs with 1.5x slack,
+        # instead of batch_graphs * max_nodes worst-case padding.
+        self.batch_graphs = batch_graphs
+        self.node_budget = node_budget or data_mod.size_budget(
+            batch_graphs, num_nodes_guess)
+        self.edge_budget = edge_budget or data_mod.size_budget(
+            batch_graphs, num_edges_guess)
         self._fn = None
+        self._fn_packed = None
         self._compiled = None
         self.params = None
         os.makedirs(build_dir, exist_ok=True)
@@ -91,14 +106,22 @@ class Project:
         def infer(params, batch_el):
             return G.apply(params, cfg, batch_el, quant)
 
+        def infer_packed(params, batch):
+            return G.apply_packed(params, cfg, batch, quant)
+
         self._fn = jax.jit(infer)
+        self._fn_packed = jax.jit(infer_packed)
         with open(os.path.join(self.build_dir, "config.json"), "w") as f:
             json.dump({"name": self.name,
                        "model": dataclasses.asdict(cfg),
                        "quant": str(self.fpx),
                        "float_or_fixed": self.float_or_fixed,
                        "max_nodes": self.max_nodes,
-                       "max_edges": self.max_edges}, f, indent=1, default=str)
+                       "max_edges": self.max_edges,
+                       "batch_graphs": self.batch_graphs,
+                       "node_budget": self.node_budget,
+                       "edge_budget": self.edge_budget},
+                      f, indent=1, default=str)
         return self._fn
 
     def _abstract_graph(self):
@@ -109,6 +132,21 @@ class Project:
                 "edge_index": sds((e, 2), jnp.int32),
                 "edge_feat": sds((e, c.edge_feat_dim), jnp.float32),
                 "num_nodes": sds((), jnp.int32)}
+
+    def _abstract_packed(self):
+        nb, eb, gm = self.node_budget, self.edge_budget, self.batch_graphs
+        c = self.dataset_cfg
+        sds = jax.ShapeDtypeStruct
+        return {"node_feat": sds((nb, c.node_feat_dim), jnp.float32),
+                "node_graph_id": sds((nb,), jnp.int32),
+                "edge_index": sds((eb, 2), jnp.int32),
+                "edge_feat": sds((eb, c.edge_feat_dim), jnp.float32),
+                "edge_graph_id": sds((eb,), jnp.int32),
+                "graph_valid": sds((gm,), jnp.bool_),
+                "graph_num_nodes": sds((gm,), jnp.int32),
+                "num_graphs": sds((), jnp.int32)}
+
+    _packed_to_device = staticmethod(G.packed_to_device)
 
     # -------------------------------------------------------- testbench --
     def gen_testbench(self, num_graphs: int = 64):
@@ -134,9 +172,12 @@ class Project:
                 "edge_feat": jnp.asarray(g.edge_feat),
                 "num_nodes": jnp.int32(g.num_nodes)}
 
-    def build_and_run_testbench(self) -> dict:
+    def build_and_run_testbench(self, packed: bool = True) -> dict:
         """Run the generated program on every testbench graph; report MAE
-        vs the float reference and the measured mean runtime."""
+        vs the float reference and the measured mean runtime. With
+        ``packed`` (default) the same graphs are also drained through the
+        packed GraphBatch program, reporting throughput in graphs/s next
+        to the single-graph latency."""
         if self._fn is None:
             self.gen_hw_model()
         if self.params is None:
@@ -161,11 +202,61 @@ class Project:
               "mean_runtime_ms": float(np.mean(times) * 1e3),
               "p50_runtime_ms": float(np.median(times) * 1e3),
               "n_graphs": len(self._tb_graphs),
+              "loop_graphs_per_s": 1.0 / max(float(np.mean(times)), 1e-12),
               "quant": str(self.fpx) if self.float_or_fixed == "fixed"
               else "float32"}
+        if packed:
+            tb["packed"] = self._run_packed_testbench(params)
         with open(os.path.join(self.build_dir, "tb_data.json"), "w") as f:
             json.dump(tb, f, indent=1)
         return tb
+
+    def _run_packed_testbench(self, params) -> dict:
+        """Drain the testbench graphs through the packed program and
+        compare against the per-graph float references."""
+        batches, dropped = data_mod.pack_dataset(
+            self._tb_graphs, self.node_budget, self.edge_budget,
+            self.batch_graphs)
+        dev_batches = [self._packed_to_device(b) for b in batches]
+        for b in dev_batches:                       # warmup / compile
+            jax.block_until_ready(self._fn_packed(params, b))
+        n_graphs = 0
+        maes = []
+        t0 = time.perf_counter()
+        outs = []
+        for b in dev_batches:
+            outs.append(self._fn_packed(params, b))
+        jax.block_until_ready(outs)
+        total_s = time.perf_counter() - t0
+        refs = iter(r for g, r in zip(self._tb_graphs, self._tb_refs)
+                    if data_mod.graph_fits_budget(
+                        g, self.node_budget, self.edge_budget))
+        for b, out in zip(batches, outs):
+            k = int(b["num_graphs"])
+            out = np.asarray(out)
+            if self.cfg.task == "graph":
+                for i in range(k):
+                    maes.append(float(np.mean(np.abs(out[i] - next(refs)))))
+            else:    # node task: rows are packed node embeddings
+                off = 0
+                for i in range(k):
+                    n = int(b["graph_num_nodes"][i])
+                    ref = next(refs)[:n]
+                    maes.append(float(np.mean(
+                        np.abs(out[off:off + n] - ref))))
+                    off += n
+            n_graphs += k
+        return {
+            "mae": float(np.mean(maes)) if maes else float("nan"),
+            "graphs_per_s": n_graphs / max(total_s, 1e-12),
+            "mean_batch_ms": total_s / max(len(batches), 1) * 1e3,
+            "n_batches": len(batches),
+            "n_graphs": n_graphs,
+            "n_dropped": len(dropped),
+            "batch_graphs": self.batch_graphs,
+            "node_budget": self.node_budget,
+            "edge_budget": self.edge_budget,
+        }
 
     # -------------------------------------------------------- synthesis --
     def run_synthesis(self, save_hlo: bool = False) -> dict:
@@ -204,7 +295,32 @@ class Project:
             else 1.0
         bytes_eff = bytes_ * width_scale
         latency = max(flops / eff_peak, bytes_eff / self.target.hbm_bw)
+        # packed-batch program: same model compiled over the GraphBatch
+        # buffers; roofline latency amortizes over batch_graphs graphs.
+        t0 = time.time()
+        lowered_p = self._fn_packed.lower(prm.abstract(plan),
+                                          self._abstract_packed())
+        compiled_p = lowered_p.compile()
+        compile_packed_s = time.time() - t0
+        cost_p = compiled_p.cost_analysis()
+        if isinstance(cost_p, (list, tuple)):
+            cost_p = cost_p[0]
+        flops_p = float(cost_p.get("flops", 0.0))
+        bytes_p = float(cost_p.get("bytes accessed", 0.0)) * width_scale
+        latency_p = max(flops_p / eff_peak, bytes_p / self.target.hbm_bw)
+        packed = {
+            "latency_s": latency_p,
+            "flops": flops_p,
+            "bytes_accessed": bytes_p,
+            "batch_graphs": self.batch_graphs,
+            "node_budget": self.node_budget,
+            "edge_budget": self.edge_budget,
+            "graphs_per_s": self.batch_graphs / max(latency_p, 1e-18),
+            "per_graph_latency_s": latency_p / max(self.batch_graphs, 1),
+            "compile_s": compile_packed_s,
+        }
         report = {
+            "packed": packed,
             "latency_s": latency,
             "latency_ms": latency * 1e3,
             "flops": flops,

@@ -4,7 +4,10 @@
 resumes mid-epoch with zero coordination — the checkpoint only needs the
 step counter. Two sources: synthetic token LM batches and synthetic
 molecular graphs (QM9/MoleculeNet-like size statistics) for the GNN paper
-workloads.
+workloads. Graphs come in two execution formats: per-graph padded COO
+(``Graph``/``graph_batch``) and the packed ``GraphBatch`` IR
+(``pack_graphs``/``graph_batch_packed``) that fuses many graphs into one
+budget-sized buffer — see DESIGN_BATCHING.md.
 """
 from __future__ import annotations
 
@@ -108,6 +111,123 @@ def graph_batch(cfg: GraphDataConfig, step: int, batch_size: int) -> dict:
         "num_edges": np.array([g.num_edges for g in graphs], np.int32),
         "y": np.stack([g.y for g in graphs]),
     }
+
+
+# ----------------------------------------------------- packed GraphBatch --
+#
+# Canonical execution format (DESIGN_BATCHING.md): many graphs packed into
+# one flat node buffer sized by a node/edge *budget* instead of a per-graph
+# worst case. Node/edge slots carry the owning graph_id; padding slots get
+# graph_id == max_graphs (the segment-op overflow bucket) and edge slots are
+# additionally marked with src == -1. All shapes are static, so one XLA
+# program serves every batch.
+
+def size_budget(batch_graphs: int, avg_count: float, slack: float = 1.5,
+                multiple: int = 8) -> int:
+    """Budget-sizing rule: slack x the expected total covers the Poisson
+    tail of graph sizes; rounded up to a lane-friendly multiple."""
+    raw = int(batch_graphs * avg_count * slack) + 1
+    return -(-raw // multiple) * multiple
+
+
+def graph_fits_budget(g: Graph, node_budget: int, edge_budget: int) -> bool:
+    return g.num_nodes <= node_budget and g.num_edges <= edge_budget
+
+
+def pack_graphs(graphs, node_budget: int, edge_budget: int,
+                max_graphs: int) -> tuple:
+    """Greedily pack a prefix of ``graphs`` into one GraphBatch dict.
+
+    Packing stops at the first graph that would overflow a budget (or at
+    ``max_graphs``), keeping dataset order so output row i corresponds to
+    graphs[i]. Returns (batch, n_packed). Raises ValueError if graphs[0]
+    alone exceeds the budget — the caller must drop or resize.
+    """
+    if not graphs:
+        raise ValueError("pack_graphs needs at least one graph")
+    if not graph_fits_budget(graphs[0], node_budget, edge_budget):
+        raise ValueError(
+            f"graph with {graphs[0].num_nodes} nodes/"
+            f"{graphs[0].num_edges} edges exceeds budget "
+            f"({node_budget} nodes/{edge_budget} edges)")
+    f = graphs[0].node_feat.shape[1]
+    fe = graphs[0].edge_feat.shape[1]
+    t = graphs[0].y.shape[0]
+    node_feat = np.zeros((node_budget, f), np.float32)
+    node_graph_id = np.full((node_budget,), max_graphs, np.int32)
+    edge_index = np.full((edge_budget, 2), -1, np.int32)
+    edge_feat = np.zeros((edge_budget, fe), np.float32)
+    edge_graph_id = np.full((edge_budget,), max_graphs, np.int32)
+    y = np.zeros((max_graphs, t), np.float32)
+    graph_valid = np.zeros((max_graphs,), bool)
+    graph_num_nodes = np.zeros((max_graphs,), np.int32)
+    n_used = e_used = k = 0
+    for g in graphs:
+        if k == max_graphs or n_used + g.num_nodes > node_budget \
+                or e_used + g.num_edges > edge_budget:
+            break
+        n, e = g.num_nodes, g.num_edges
+        node_feat[n_used:n_used + n] = g.node_feat[:n]
+        node_graph_id[n_used:n_used + n] = k
+        edge_index[e_used:e_used + e] = g.edge_index[:e] + n_used
+        edge_feat[e_used:e_used + e] = g.edge_feat[:e]
+        edge_graph_id[e_used:e_used + e] = k
+        y[k] = g.y
+        graph_valid[k] = True
+        graph_num_nodes[k] = n
+        n_used += n
+        e_used += e
+        k += 1
+    batch = {"node_feat": node_feat, "node_graph_id": node_graph_id,
+             "edge_index": edge_index, "edge_feat": edge_feat,
+             "edge_graph_id": edge_graph_id, "graph_valid": graph_valid,
+             "graph_num_nodes": graph_num_nodes,
+             "num_graphs": np.int32(k), "y": y}
+    return batch, k
+
+
+def pack_dataset(graphs, node_budget: int, edge_budget: int,
+                 max_graphs: int) -> tuple:
+    """Pack an entire dataset into a list of GraphBatch dicts.
+
+    Graphs that can never fit the budget on their own are returned in
+    ``dropped`` instead of stalling the stream. Order is preserved:
+    concatenating the valid rows of each batch visits the non-dropped
+    graphs in dataset order.
+    """
+    batches, dropped = [], []
+    i = 0
+    while i < len(graphs):
+        if not graph_fits_budget(graphs[i], node_budget, edge_budget):
+            dropped.append(graphs[i])
+            i += 1
+            continue
+        batch, k = pack_graphs(graphs[i:], node_budget, edge_budget,
+                               max_graphs)
+        batches.append(batch)
+        i += k
+    return batches, dropped
+
+
+def graph_batch_packed(cfg: GraphDataConfig, step: int, node_budget: int,
+                       edge_budget: int, max_graphs: int) -> dict:
+    """Deterministic step-indexed packed batch: the candidate window is
+    the ``max_graphs`` dataset indices starting at step * max_graphs
+    (mod dataset size), packed greedily until a budget binds. Pure in
+    (cfg.seed, step) — a restarted worker rebuilds the identical batch.
+
+    When a budget binds before the window is exhausted, the tail graphs
+    of that window are skipped for this step. The start index rotates by
+    one extra slot per epoch, so window boundaries shift across epochs
+    and a skipped tail is packed on a later pass — no graph is
+    *permanently* excluded, even when max_graphs divides num_graphs.
+    """
+    epoch = (step * max_graphs) // cfg.num_graphs
+    idx0 = (step * max_graphs + epoch) % cfg.num_graphs
+    graphs = [make_graph(cfg, (idx0 + i) % cfg.num_graphs)
+              for i in range(max_graphs)]
+    batch, _ = pack_graphs(graphs, node_budget, edge_budget, max_graphs)
+    return batch
 
 
 def compute_average_nodes_and_edges(dataset, round_val: bool = True):

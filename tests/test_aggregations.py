@@ -1,8 +1,12 @@
 """Property-based tests (hypothesis) for the paper's partial aggregations:
 permutation invariance, Welford == two-pass variance, streaming == segment
-forms, and degree-table correctness."""
+forms, and degree-table correctness. Skipped (not errored) on machines
+without hypothesis so the tier-1 suite still collects."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import aggregations as A

@@ -1,0 +1,64 @@
+"""DSE robustness: stable artifact naming, fail-soft exploration, and
+batch-budget throughput models."""
+import numpy as np
+
+from repro.core import dse
+
+
+def _db(n=10, seed=0, hbm=None, with_throughput=True):
+    rng = np.random.default_rng(seed)
+    db = []
+    for _ in range(n):
+        d = dse.sample_design(rng)
+        d["latency_s"] = float(rng.uniform(1e-5, 1e-3))
+        d["hbm_bytes"] = float(hbm if hbm is not None
+                               else rng.uniform(1e6, 1e9))
+        if with_throughput:
+            d["graphs_per_s"] = float(rng.uniform(1e3, 1e6))
+        db.append(d)
+    return db
+
+
+def test_design_name_stable_and_order_independent():
+    rng = np.random.default_rng(2)
+    d = dse.sample_design(rng)
+    name1 = dse.design_name(d)
+    name2 = dse.design_name(dict(reversed(list(d.items()))))
+    assert name1 == name2            # insertion order must not matter
+    assert name1.startswith("dse_") and len(name1) == len("dse_") + 12
+    d2 = dict(d, gnn_hidden_dim=d["gnn_hidden_dim"] + 1)
+    assert dse.design_name(d2) != name1
+
+
+def test_explore_feasible_flag_true_under_loose_budget():
+    models = dse.fit_models(_db())
+    best = dse.explore(models, n_candidates=64, seed=1,
+                       memory_budget=1e18)
+    assert best["feasible"] is True
+    assert best["pred_latency_s"] > 0
+    assert "pred_graphs_per_s" in best      # throughput model fitted
+
+
+def test_explore_fails_soft_when_nothing_fits():
+    # every training point uses ~1e9 bytes, so predictions never fit 1 B
+    models = dse.fit_models(_db(hbm=1e9))
+    best = dse.explore(models, n_candidates=64, seed=1, memory_budget=1.0)
+    assert best["feasible"] is False
+    assert best["memory_violation_bytes"] > 0
+    assert best["pred_latency_s"] > 0       # still the best-latency design
+
+
+def test_fit_models_without_throughput_key():
+    models = dse.fit_models(_db(with_throughput=False))
+    assert models.throughput is None
+    best = dse.explore(models, n_candidates=32, seed=2,
+                       memory_budget=1e18)
+    assert "pred_graphs_per_s" not in best
+
+
+def test_sampled_designs_carry_batch_budgets():
+    rng = np.random.default_rng(4)
+    d = dse.sample_design(rng)
+    assert d["batch_graphs"] in dse.SPACE["batch_graphs"]
+    assert d["node_budget"] >= d["batch_graphs"] * d["avg_nodes"]
+    assert d["edge_budget"] >= d["batch_graphs"] * d["avg_edges"]

@@ -1,0 +1,241 @@
+"""Packed GraphBatch IR: packed-vs-padded equivalence for every conv type
+and aggregation (including isolated nodes and empty-edge graphs), packing
+invariants, budget overflow handling, and deterministic bucketing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregations as A
+from repro.core import gnn_model as G
+from repro.core.convs import CONV_TYPES
+from repro.core.pooling import POOLINGS, global_pool, segment_global_pool
+from repro.data import pipeline as P
+from repro.nn import param as prm
+
+DS = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
+                       node_feat_dim=11, edge_feat_dim=4, seed=5)
+
+
+def _cfg(conv, task="graph"):
+    return G.GNNModelConfig(
+        graph_input_feature_dim=11, graph_input_edge_dim=4,
+        gnn_hidden_dim=16, gnn_num_layers=2, gnn_output_dim=8,
+        gnn_conv=conv, task=task,
+        mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
+                             hidden_layers=1) if task == "graph" else None)
+
+
+def _empty_edge_graph(n=3):
+    """A graph whose nodes are all isolated (num_edges == 0)."""
+    nf = np.zeros((DS.max_nodes, DS.node_feat_dim), np.float32)
+    nf[:n] = np.random.default_rng(7).standard_normal(
+        (n, DS.node_feat_dim))
+    return P.Graph(node_feat=nf,
+                   edge_index=np.full((DS.max_edges, 2), -1, np.int32),
+                   edge_feat=np.zeros((DS.max_edges, DS.edge_feat_dim),
+                                      np.float32),
+                   num_nodes=n, num_edges=0,
+                   y=np.zeros((1,), np.float32))
+
+
+def _graphs():
+    gs = [P.make_graph(DS, i) for i in range(5)]
+    gs.insert(2, _empty_edge_graph())        # isolated nodes, zero edges
+    return gs
+
+
+def _el(g):
+    return {"node_feat": jnp.asarray(g.node_feat),
+            "edge_index": jnp.asarray(g.edge_index),
+            "edge_feat": jnp.asarray(g.edge_feat),
+            "num_nodes": jnp.int32(g.num_nodes)}
+
+
+def _pack(graphs, max_graphs=8):
+    batch, k = P.pack_graphs(graphs, 128, 256, max_graphs)
+    assert k == len(graphs)
+    return {kk: jnp.asarray(v) for kk, v in batch.items() if kk != "y"}
+
+
+# -------------------------------------------------- model equivalence ---
+@pytest.mark.parametrize("conv", CONV_TYPES)
+def test_apply_packed_matches_apply(conv):
+    """One jitted packed program == the per-graph padded oracle, for every
+    conv type, including an empty-edge graph mid-batch."""
+    cfg = _cfg(conv)
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+    graphs = _graphs()
+    jb = _pack(graphs)
+    packed_fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    loop_fn = jax.jit(lambda p, el: G.apply(p, cfg, el))
+    out = np.asarray(packed_fn(params, jb))
+    for i, g in enumerate(graphs):
+        ref = np.asarray(loop_fn(params, _el(g)))
+        assert float(np.mean(np.abs(out[i] - ref))) < 1e-4, (conv, i)
+
+
+@pytest.mark.parametrize("conv", CONV_TYPES)
+def test_apply_packed_node_task(conv):
+    cfg = _cfg(conv, task="node")
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(1))
+    graphs = _graphs()
+    jb = _pack(graphs)
+    packed_fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    loop_fn = jax.jit(lambda p, el: G.apply(p, cfg, el))
+    out = np.asarray(packed_fn(params, jb))
+    off = 0
+    for g in graphs:
+        ref = np.asarray(loop_fn(params, _el(g)))[:g.num_nodes]
+        got = out[off:off + g.num_nodes]
+        assert float(np.mean(np.abs(got - ref))) < 1e-4
+        off += g.num_nodes
+
+
+def test_mse_loss_packed_matches_per_graph():
+    cfg = _cfg("gcn")
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(2))
+    graphs = _graphs()
+    batch, k = P.pack_graphs(graphs, 128, 256, 8)
+    jb = {kk: jnp.asarray(v) for kk, v in batch.items()}
+    loss = float(G.mse_loss_packed(params, cfg, jb))
+    per = [float(jnp.mean(jnp.square(
+        G.apply(params, cfg, _el(g)) - jnp.asarray(g.y))))
+        for g in graphs]
+    np.testing.assert_allclose(loss, np.mean(per), rtol=1e-4)
+
+
+# --------------------------------------------- aggregation equivalence --
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+def test_packed_segment_aggregate_matches_per_graph(agg):
+    """Segment aggregation over the packed edge buffer == per-graph
+    aggregation, for all six aggregations."""
+    graphs = _graphs()
+    batch, _ = P.pack_graphs(graphs, 128, 256, 8)
+    rng = np.random.default_rng(0)
+    msgs = rng.standard_normal((256, 3)).astype(np.float32)
+    dst = batch["edge_index"][:, 1]
+    valid = batch["edge_index"][:, 0] >= 0
+    out = np.asarray(A.segment_aggregate(
+        agg, jnp.asarray(msgs), jnp.asarray(np.maximum(dst, 0)), 128,
+        jnp.asarray(valid)))
+    off_n = off_e = 0
+    for g in graphs:
+        for v in range(g.num_nodes):
+            sel = (batch["edge_index"][:, 1] == off_n + v) & valid
+            if not sel.any():
+                np.testing.assert_allclose(out[off_n + v], 0.0, atol=1e-6)
+                continue
+            want = np.asarray(A.aggregate_stream(
+                agg, jnp.asarray(msgs[sel])))
+            np.testing.assert_allclose(out[off_n + v], want, rtol=1e-3,
+                                       atol=1e-3)
+        off_n += g.num_nodes
+        off_e += g.num_edges
+
+
+@pytest.mark.parametrize("kind", POOLINGS)
+def test_segment_pooling_matches_dense(kind):
+    graphs = _graphs()
+    batch, _ = P.pack_graphs(graphs, 128, 256, 8)
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((128, 6)).astype(np.float32)
+    gid = jnp.asarray(batch["node_graph_id"])
+    got = np.asarray(segment_global_pool(kind, jnp.asarray(x), gid, 8))
+    off = 0
+    for i, g in enumerate(graphs):
+        xg = x[off:off + g.num_nodes]
+        mask = jnp.ones((g.num_nodes,), bool)
+        want = np.asarray(global_pool(kind, jnp.asarray(xg), mask))
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+        off += g.num_nodes
+    # padding rows (beyond the packed graphs) pool to zero
+    np.testing.assert_allclose(got[len(graphs):], 0.0, atol=1e-6)
+
+
+def test_segment_counts_match_graph_num_nodes():
+    """segment_counts over the packed node/edge ids reproduces the
+    per-graph counts recorded at pack time (padding -> overflow bucket)."""
+    graphs = _graphs()
+    batch, k = P.pack_graphs(graphs, 128, 256, 8)
+    node_counts = np.asarray(A.segment_counts(
+        jnp.asarray(batch["node_graph_id"]), 8))
+    assert node_counts.dtype == np.float32
+    np.testing.assert_array_equal(node_counts,
+                                  batch["graph_num_nodes"].astype(np.float32))
+    edge_counts = np.asarray(A.segment_counts(
+        jnp.asarray(batch["edge_graph_id"]), 8))
+    np.testing.assert_array_equal(
+        edge_counts, np.float32([g.num_edges for g in graphs] + [0, 0]))
+    # explicit valid mask routes masked slots into the dropped bucket
+    masked = np.asarray(A.segment_counts(
+        jnp.asarray(batch["node_graph_id"]), 8,
+        valid=jnp.asarray(batch["node_graph_id"] != 0)))
+    assert masked[0] == 0.0
+
+
+# ------------------------------------------------------- pack invariants --
+def test_pack_dataset_partitions_and_respects_budgets():
+    """Property test: over many budget settings, every graph lands in
+    exactly one batch or in ``dropped``, and no batch overflows."""
+    rng = np.random.default_rng(0)
+    cfg = P.GraphDataConfig(avg_nodes=14, max_nodes=80, max_edges=120,
+                            node_feat_dim=5, edge_feat_dim=2, seed=3)
+    graphs = [P.make_graph(cfg, i) for i in range(40)]
+    for trial in range(12):
+        nb = int(rng.integers(8, 120))
+        eb = int(rng.integers(8, 200))
+        mg = int(rng.integers(1, 12))
+        batches, dropped = P.pack_dataset(graphs, nb, eb, mg)
+        n_packed = sum(int(b["num_graphs"]) for b in batches)
+        assert n_packed + len(dropped) == len(graphs)
+        for g in dropped:     # only graphs that can never fit are dropped
+            assert g.num_nodes > nb or g.num_edges > eb
+        for b in batches:
+            k = int(b["num_graphs"])
+            assert 1 <= k <= mg
+            node_valid = b["node_graph_id"] < mg
+            edge_valid = b["edge_index"][:, 0] >= 0
+            assert int(node_valid.sum()) <= nb
+            assert int(edge_valid.sum()) <= eb
+            # edges reference valid nodes of their own graph
+            src = b["edge_index"][edge_valid]
+            assert (b["node_graph_id"][src[:, 0]]
+                    == b["edge_graph_id"][edge_valid]).all()
+            assert (b["node_graph_id"][src[:, 1]]
+                    == b["edge_graph_id"][edge_valid]).all()
+            # graph ids are contiguous 0..k-1 in packing order
+            ids = b["node_graph_id"][node_valid]
+            assert (np.diff(ids) >= 0).all() and set(ids) == set(range(k))
+
+
+def test_pack_graphs_raises_on_oversize_first():
+    g = P.make_graph(DS, 0)
+    with pytest.raises(ValueError):
+        P.pack_graphs([g], node_budget=2, edge_budget=2, max_graphs=4)
+
+
+def test_pack_graphs_stops_at_budget():
+    graphs = [P.make_graph(DS, i) for i in range(10)]
+    nb = graphs[0].num_nodes + graphs[1].num_nodes
+    batch, k = P.pack_graphs(graphs, nb, 10_000, 10)
+    assert k == 2                      # third graph would overflow nodes
+    assert int((batch["node_graph_id"] < 10).sum()) <= nb
+
+
+def test_graph_batch_packed_deterministic():
+    b1 = P.graph_batch_packed(DS, step=3, node_budget=256,
+                              edge_budget=512, max_graphs=8)
+    b2 = P.graph_batch_packed(DS, step=3, node_budget=256,
+                              edge_budget=512, max_graphs=8)
+    np.testing.assert_array_equal(b1["node_feat"], b2["node_feat"])
+    np.testing.assert_array_equal(b1["edge_index"], b2["edge_index"])
+    b3 = P.graph_batch_packed(DS, step=4, node_budget=256,
+                              edge_budget=512, max_graphs=8)
+    assert not np.array_equal(b1["node_feat"], b3["node_feat"])
+
+
+def test_size_budget_rule():
+    assert P.size_budget(32, 18) % 8 == 0
+    assert P.size_budget(32, 18) >= 32 * 18      # slack over the mean
+    assert P.size_budget(1, 1) >= 1

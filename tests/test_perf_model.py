@@ -45,6 +45,63 @@ def test_kfold_cv_runs():
     assert 0 < score < 100
 
 
+def _best_split_reference(self, x, y):
+    """The scalar-loop split search the vectorized version replaced;
+    pinned here so refactors cannot silently change the fitted trees."""
+    n, d = x.shape
+    feats = np.arange(d)
+    if self.max_features:
+        k = max(1, int(d * self.max_features))
+        feats = self.rng.choice(d, size=k, replace=False)
+    best = (None, None, np.inf)
+    for f in feats:
+        order = np.argsort(x[:, f], kind="stable")
+        xs, ys = x[order, f], y[order]
+        csum = np.cumsum(ys)
+        csq = np.cumsum(ys * ys)
+        total, total_sq = csum[-1], csq[-1]
+        ml = self.min_samples_leaf
+        for i in range(ml, n - ml + 1):
+            if xs[i - 1] == xs[min(i, n - 1)]:
+                continue
+            sl, sl2 = csum[i - 1], csq[i - 1]
+            nl, nr = i, n - i
+            sse = (sl2 - sl * sl / nl) \
+                + ((total_sq - sl2) - (total - sl) ** 2 / nr)
+            if sse < best[2]:
+                best = (f, (xs[i - 1] + xs[min(i, n - 1)]) / 2, sse)
+    return best
+
+
+class _ReferenceTree(PM.DecisionTreeRegressor):
+    _best_split = _best_split_reference
+
+
+def test_vectorized_split_matches_scalar_reference():
+    """Same splits, same trees: the vectorized prefix-sum SSE search must
+    reproduce the original scalar loop's predictions exactly."""
+    for seed in range(4):
+        x, y = _toy_data(n=150, seed=seed)
+        kw = dict(max_depth=10, min_samples_leaf=2)
+        fast = PM.DecisionTreeRegressor(
+            rng=np.random.default_rng(seed), max_features=0.8, **kw)
+        ref = _ReferenceTree(
+            rng=np.random.default_rng(seed), max_features=0.8, **kw)
+        fast.fit(x[:100], y[:100])
+        ref.fit(x[:100], y[:100])
+        np.testing.assert_array_equal(fast.predict(x[100:]),
+                                      ref.predict(x[100:]))
+
+
+def test_vectorized_split_faster_smoke():
+    """The split search handles a wide, deep fit without pathology."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, (400, 21))
+    y = x @ rng.uniform(-1, 1, 21) + rng.normal(0, 0.1, 400)
+    tree = PM.DecisionTreeRegressor(max_depth=12).fit(x, y)
+    assert np.mean((tree.predict(x) - y) ** 2) < np.var(y)
+
+
 def test_feature_vector_shape():
     rng = np.random.default_rng(0)
     d = dse.sample_design(rng)
