@@ -5,19 +5,93 @@ one pass over the (sorted) edge stream; variance/std use Welford's online
 algorithm [37]. We implement the identical math twice:
 
 * a *streaming* form (init / update / finalize) — consumed by the Pallas
-  ``gnn_aggregate`` kernel and by the pure-scan reference, and
-* a *segment* form over padded COO edge lists — the XLA-friendly oracle
-  used by the distributed model (jax.ops.segment_* lower to efficient
-  sorted-segment reductions on TPU).
+  kernels (the padded-table ``gnn_aggregate`` and the packed-COO
+  ``segment_aggregate``) and by the pure-scan reference, and
+* a *segment* form over COO edge lists — the hot path for both padded
+  graphs and the packed GraphBatch IR (DESIGN_BATCHING.md), dispatched
+  through a backend switch: ``backend="xla"`` (default; jax.ops.segment_*
+  lower to efficient sorted-segment reductions under pjit) or
+  ``backend="pallas"`` (the fused ``kernels/segment_aggregate`` edge-block
+  kernel, engaged on single-device serving via
+  ``set_default_backend``/``--agg-backend``).
 
 Supported: sum, mean, min, max, var, std (matching the paper).
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
 AGGREGATIONS = ("sum", "mean", "min", "max", "var", "std")
+
+SEGMENT_BACKENDS = ("xla", "pallas")
+
+# Process-wide defaults for ``segment_aggregate``'s backend=/tile
+# arguments. "xla" everywhere a program may run under pjit; serving flips
+# to "pallas" on single-device hosts (launch/serve.py --agg-backend).
+# Tile sizes are the DSE knobs (dse.SPACE edge_block/node_block).
+_DEFAULT_BACKEND = "xla"
+_DEFAULT_EDGE_BLOCK = 128
+_DEFAULT_NODE_BLOCK = 128
+# None = auto: interpret the Pallas kernel everywhere except a real TPU
+# backend (Mosaic compiles only there; interpret mode is the CPU/CI path)
+_DEFAULT_INTERPRET: bool | None = None
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    if interpret is None:
+        interpret = _DEFAULT_INTERPRET
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return interpret
+
+
+def set_default_backend(backend: str, edge_block: int | None = None,
+                        node_block: int | None = None,
+                        interpret: bool | None = None) -> str:
+    """Set the process default segment-aggregation backend (and
+    optionally the Pallas tile sizes / interpret mode); returns the
+    previous backend so callers can restore it. Trace-time effective:
+    jitted programs bake in whichever defaults were set when first
+    traced."""
+    global _DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK, \
+        _DEFAULT_INTERPRET
+    if backend not in SEGMENT_BACKENDS:
+        raise ValueError(backend)
+    prev = _DEFAULT_BACKEND
+    _DEFAULT_BACKEND = backend
+    if edge_block is not None:
+        _DEFAULT_EDGE_BLOCK = int(edge_block)
+    if node_block is not None:
+        _DEFAULT_NODE_BLOCK = int(node_block)
+    if interpret is not None:
+        _DEFAULT_INTERPRET = bool(interpret)
+    return prev
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+@contextlib.contextmanager
+def backend_scope(backend: str, edge_block: int | None = None,
+                  node_block: int | None = None,
+                  interpret: bool | None = None):
+    """Temporarily override the segment-aggregation defaults. Wrap the
+    *tracing* of a jitted program (e.g. Project.gen_hw_model's infer fns)
+    to bake a backend + tile choice into that program only."""
+    global _DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK, \
+        _DEFAULT_INTERPRET
+    prev = (_DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK,
+            _DEFAULT_INTERPRET)
+    try:
+        set_default_backend(backend, edge_block, node_block, interpret)
+        yield
+    finally:
+        (_DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK,
+         _DEFAULT_INTERPRET) = prev
 
 
 # ------------------------------------------------------- streaming form --
@@ -85,9 +159,29 @@ def aggregate_stream(agg: str, xs, mask=None):
 
 # --------------------------------------------------------- segment form --
 def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
-                      valid=None):
+                      valid=None, *, backend: str | None = None,
+                      edge_block: int | None = None,
+                      node_block: int | None = None,
+                      interpret: bool | None = None):
     """messages: (E, dim) -> (num_segments, dim). seg_ids: (E,) int32;
-    padded edges carry seg_ids == num_segments (dropped)."""
+    padded edges carry seg_ids == num_segments (dropped).
+
+    backend=None uses the process default (``set_default_backend``);
+    "pallas" routes through the fused edge-block kernel with the given
+    tile sizes (DSE knobs ``edge_block``/``node_block``), "xla" through
+    jax.ops.segment_*. Both produce identical results to fp32 tolerance;
+    the Pallas path is forward-only (no custom VJP yet)."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend not in SEGMENT_BACKENDS:
+        raise ValueError(backend)
+    if backend == "pallas":
+        from repro.kernels.segment_aggregate.ops import (
+            segment_aggregate as _pallas_segment_aggregate)
+        return _pallas_segment_aggregate(
+            messages, seg_ids, valid, num_segments=num_segments, agg=agg,
+            edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
+            node_block=node_block or _DEFAULT_NODE_BLOCK,
+            interpret=_resolve_interpret(interpret))
     if valid is not None:
         seg_ids = jnp.where(valid, seg_ids, num_segments)
     m = messages.astype(jnp.float32)
@@ -105,12 +199,16 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
         out = jax.ops.segment_max(m, seg_ids, ns)
         out = jnp.where(jnp.isfinite(out), out, 0.0)
     elif agg in ("var", "std"):
+        # two-pass shifted form: E[(x - mu)^2] matches the Welford kernel
+        # to fp32 tolerance (E[x^2] - E[x]^2 loses near-duplicate
+        # segments to catastrophic cancellation)
         s = jax.ops.segment_sum(m, seg_ids, ns)
-        s2 = jax.ops.segment_sum(jnp.square(m), seg_ids, ns)
         c = jnp.maximum(jax.ops.segment_sum(
             jnp.ones_like(m[:, :1]), seg_ids, ns), 1.0)
         mu = s / c
-        var = jnp.maximum(s2 / c - jnp.square(mu), 1e-12)
+        dev = m - jnp.take(mu, seg_ids, axis=0)
+        var = jax.ops.segment_sum(jnp.square(dev), seg_ids, ns) / c
+        var = jnp.maximum(var, 1e-12)
         out = jnp.sqrt(var) if agg == "std" else var
     else:
         raise ValueError(agg)

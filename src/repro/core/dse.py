@@ -26,7 +26,10 @@ log_ = logging.getLogger(__name__)
 
 # Listing 2 (paper) design space, extended with the packed-batch budget
 # axis (batch_graphs sizes the GraphBatch node/edge buffers — the on-chip
-# working-set knob the fitted models learn throughput against).
+# working-set knob the fitted models learn throughput against) and the
+# segment-aggregation kernel tile sizes (edge_block/node_block — the TPU
+# analogue of the paper's parallelization factors, autotuned the same
+# way: sampled, synthesized, and predicted by the fitted models).
 SPACE = {
     "conv": ["gcn", "gin", "pna", "sage"],
     "gnn_hidden_dim": [64, 128, 256],
@@ -42,6 +45,8 @@ SPACE = {
     "mlp_p_hidden": [2, 4, 8],
     "mlp_p_out": [1],
     "batch_graphs": [8, 16, 32, 64],
+    "edge_block": [64, 128, 256],
+    "node_block": [32, 64, 128],
 }
 
 
@@ -109,7 +114,9 @@ def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
         num_nodes_guess=d["avg_nodes"], num_edges_guess=d["avg_edges"],
         degree_guess=d["avg_degree"],
         batch_graphs=d.get("batch_graphs", 32),
-        node_budget=d.get("node_budget"), edge_budget=d.get("edge_budget"))
+        node_budget=d.get("node_budget"), edge_budget=d.get("edge_budget"),
+        edge_block=d.get("edge_block", 128),
+        node_block=d.get("node_block", 128))
     proj.gen_hw_model()
     report = proj.run_synthesis()
     out = dict(d)

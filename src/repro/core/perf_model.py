@@ -165,6 +165,8 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     "fpx_bits",
     # packed GraphBatch budget axis (predicting packed throughput)
     "batch_graphs", "node_budget", "edge_budget",
+    # segment-aggregation kernel tile sizes (Pallas edge/node blocks)
+    "edge_block", "node_block",
 ]
 
 
@@ -185,4 +187,6 @@ def features(design: dict) -> np.ndarray:
         design.get("batch_graphs", 1),
         design.get("node_budget", design["avg_nodes"]),
         design.get("edge_budget", design["avg_edges"]),
+        design.get("edge_block", 128),
+        design.get("node_block", 128),
     ], dtype=float)

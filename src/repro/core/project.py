@@ -43,6 +43,10 @@ class TPUTarget:
     link_bw: float = 50e9            # B/s per ICI link
     hbm_bytes: float = 16e9
     vmem_bytes: float = 128 * 2**20  # VMEM per core
+    # fixed per-grid-step cost of a Pallas kernel invocation (dispatch +
+    # block DMA setup) — the modeled quantity that makes tile-size knobs
+    # observable to the DSE objective
+    kernel_step_overhead: float = 100e-9
 
     def roofline_latency(self, flops: float, bytes_: float,
                          coll_bytes: float = 0.0) -> float:
@@ -59,7 +63,9 @@ class Project:
                  target: TPUTarget = TPUTarget(), n_jobs: int = 1,
                  seed: int = 0, batch_graphs: int = 32,
                  node_budget: int | None = None,
-                 edge_budget: int | None = None):
+                 edge_budget: int | None = None,
+                 edge_block: int = 128, node_block: int = 128,
+                 agg_backend: str = "xla"):
         self.name = name
         self.cfg = model_cfg
         self.task = task
@@ -85,6 +91,11 @@ class Project:
             batch_graphs, num_nodes_guess)
         self.edge_budget = edge_budget or data_mod.size_budget(
             batch_graphs, num_edges_guess)
+        # segment-aggregation kernel tile sizes (DSE knobs, mirroring the
+        # paper's parallelization factors) + backend selection
+        self.edge_block = edge_block
+        self.node_block = node_block
+        self.agg_backend = agg_backend
         self._fn = None
         self._fn_packed = None
         self._compiled = None
@@ -102,15 +113,24 @@ class Project:
         """Build the specialized inference program (codegen analogue)."""
         cfg = self.cfg
         quant = self.fpx if self.float_or_fixed == "fixed" else None
+        backend = self.agg_backend
 
-        def infer(params, batch_el):
-            return G.apply(params, cfg, batch_el, quant)
+        def with_backend(apply_fn):
+            # trace-time scope: segment_aggregate reads the process
+            # default while the jitted program is being traced, so the
+            # project's backend + tile choice is baked into its programs
+            # without leaking to other projects in the same process
+            def fn(params, batch):
+                from repro.core import aggregations as agg_mod
+                with agg_mod.backend_scope(backend, self.edge_block,
+                                           self.node_block):
+                    return apply_fn(params, batch)
+            return fn
 
-        def infer_packed(params, batch):
-            return G.apply_packed(params, cfg, batch, quant)
-
-        self._fn = jax.jit(infer)
-        self._fn_packed = jax.jit(infer_packed)
+        self._fn = jax.jit(with_backend(
+            lambda p, el: G.apply(p, cfg, el, quant)))
+        self._fn_packed = jax.jit(with_backend(
+            lambda p, b: G.apply_packed(p, cfg, b, quant)))
         with open(os.path.join(self.build_dir, "config.json"), "w") as f:
             json.dump({"name": self.name,
                        "model": dataclasses.asdict(cfg),
@@ -120,7 +140,10 @@ class Project:
                        "max_edges": self.max_edges,
                        "batch_graphs": self.batch_graphs,
                        "node_budget": self.node_budget,
-                       "edge_budget": self.edge_budget},
+                       "edge_budget": self.edge_budget,
+                       "edge_block": self.edge_block,
+                       "node_block": self.node_block,
+                       "agg_backend": self.agg_backend},
                       f, indent=1, default=str)
         return self._fn
 
@@ -307,9 +330,24 @@ class Project:
             cost_p = cost_p[0]
         flops_p = float(cost_p.get("flops", 0.0))
         bytes_p = float(cost_p.get("bytes accessed", 0.0)) * width_scale
-        latency_p = max(flops_p / eff_peak, bytes_p / self.target.hbm_bw)
+        # aggregation-engine tile model: the segment kernel sweeps
+        # ceil(edge_budget/edge_block) x ceil(node_budget/node_block)
+        # grid steps per conv layer, each paying a fixed dispatch/DMA
+        # overhead — the II/unroll-factor analogue for the tile knobs,
+        # and what the fitted DSE models learn edge_block/node_block
+        # against (smaller tiles -> more steps -> higher latency).
+        grid_steps = (-(-self.edge_budget // self.edge_block)
+                      * -(-self.node_budget // self.node_block))
+        agg_overhead_s = (self.cfg.gnn_num_layers * grid_steps
+                          * self.target.kernel_step_overhead)
+        latency_p = max(flops_p / eff_peak, bytes_p / self.target.hbm_bw) \
+            + agg_overhead_s
         packed = {
             "latency_s": latency_p,
+            "agg_grid_steps": grid_steps,
+            "agg_overhead_s": agg_overhead_s,
+            "edge_block": self.edge_block,
+            "node_block": self.node_block,
             "flops": flops_p,
             "bytes_accessed": bytes_p,
             "batch_graphs": self.batch_graphs,

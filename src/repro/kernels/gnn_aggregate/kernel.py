@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: fused neighbor gather + single-pass aggregation.
+"""Pallas TPU kernel: fused neighbor gather + single-pass aggregation
+over the *legacy padded (N, K) neighbor-table layout*.
 
 The paper's message-passing engine (Fig. 3) keeps the node-embedding table
 in BRAM and streams each node's neighbor block through phi->partial-agg.
@@ -7,6 +8,13 @@ table in VMEM (600 x 256 fp32 = 0.6 MB), so the kernel pins the table and
 iterates a *padded neighbor table* (N, K) — the CSR neighbor/offset pair
 recast as a dense structure XLA-style static shapes want. Aggregations are
 the paper's O(1)-state single-pass forms, including Welford var/std.
+
+Note: the hot path no longer runs through this layout. Packed GraphBatch
+inference (DESIGN_BATCHING.md) lowers every conv through
+``core.aggregations.segment_aggregate`` over flat COO edge streams, whose
+fused Pallas form lives in ``kernels/segment_aggregate`` behind the
+``backend="xla"|"pallas"`` switch. This kernel remains for single padded
+graphs whose neighbor lists are already densified.
 
 Grid: (node_tiles,). Block shapes:
   x        (N, F)  — full table, VMEM-pinned (BRAM analogue)

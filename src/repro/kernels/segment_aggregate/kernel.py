@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: fused edge-segment aggregation over packed COO.
+
+The packed GraphBatch IR (DESIGN_BATCHING.md) carries edges as a flat COO
+stream — messages (E, F) plus per-edge destination segment ids — which is
+the layout the paper's message-passing engine (Fig. 3) consumes: a sorted
+edge stream driving single-pass partial aggregations (§V-B). This kernel
+is the TPU analogue of that datapath for *packed* batches: the node
+accumulator table lives in VMEM scratch (the BRAM analogue), the edge
+stream is tiled into ``edge_block``-sized chunks, and each grid step folds
+one chunk into the table. var/std use Welford's online update, identical
+math to the streaming reference in ``core.aggregations``.
+
+Grid: (node_tiles, edge_tiles) — the edge axis is innermost/sequential,
+so each node tile's accumulator persists in VMEM across the whole edge
+stream. Block shapes:
+  msg   (EB, F)  — this step's edge messages
+  dst   (1, EB)  — destination segment ids (-1 = padding, never matches)
+  out   (NB, F)  — this node tile's aggregate (revisited across j)
+Scratch: count (NB, 1) always; Welford mean/M2 (NB, F) for var/std.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+AGGS = ("sum", "mean", "min", "max", "var", "std")
+
+
+def _seg_kernel(msg_ref, dst_ref, out_ref, *scratch, agg: str,
+                edge_steps: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nb, f = out_ref.shape
+    eb = msg_ref.shape[0]
+    cnt_ref = scratch[0]
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        if agg in ("sum", "mean"):
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif agg == "min":
+            out_ref[...] = jnp.full(out_ref.shape, jnp.inf, out_ref.dtype)
+        elif agg == "max":
+            out_ref[...] = jnp.full(out_ref.shape, -jnp.inf, out_ref.dtype)
+        else:                                   # Welford mean / M2
+            scratch[1][...] = jnp.zeros_like(scratch[1])
+            scratch[2][...] = jnp.zeros_like(scratch[2])
+
+    # (NB, EB) edge->node assignment for this tile pair; padding edges
+    # carry dst == -1 and match no node row.
+    node_ids = i * nb + jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+    onehot = dst_ref[...] == node_ids
+    msg = msg_ref[...].astype(jnp.float32)
+
+    if agg in ("sum", "mean"):
+        # scatter-add as a matmul: the MXU does the routing
+        onef = onehot.astype(jnp.float32)
+        out_ref[...] += jnp.dot(onef, msg,
+                                preferred_element_type=jnp.float32)
+        cnt_ref[...] += jnp.sum(onef, axis=1, keepdims=True)
+    elif agg in ("min", "max"):
+        def body(e, state):
+            acc, cnt = state
+            sel = jax.lax.dynamic_slice(onehot, (0, e), (nb, 1))
+            row = jax.lax.dynamic_slice(msg, (e, 0), (1, f))
+            upd = jnp.minimum(acc, row) if agg == "min" \
+                else jnp.maximum(acc, row)
+            return (jnp.where(sel, upd, acc),
+                    cnt + sel.astype(jnp.float32))
+        acc, cnt = jax.lax.fori_loop(
+            0, eb, body, (out_ref[...], cnt_ref[...]))
+        out_ref[...] = acc
+        cnt_ref[...] = cnt
+    else:
+        # Welford single-pass (paper §V-B): O(1) state per node row
+        mean_ref, m2_ref = scratch[1], scratch[2]
+
+        def body(e, state):
+            mean, m2, cnt = state
+            sel = jax.lax.dynamic_slice(onehot, (0, e), (nb, 1))
+            row = jax.lax.dynamic_slice(msg, (e, 0), (1, f))
+            cnt_new = cnt + sel.astype(jnp.float32)
+            safe = jnp.maximum(cnt_new, 1.0)
+            delta = row - mean
+            mean_new = mean + jnp.where(sel, delta / safe, 0.0)
+            m2_new = m2 + jnp.where(sel, delta * (row - mean_new), 0.0)
+            return mean_new, m2_new, cnt_new
+        mean, m2, cnt = jax.lax.fori_loop(
+            0, eb, body, (mean_ref[...], m2_ref[...], cnt_ref[...]))
+        mean_ref[...] = mean
+        m2_ref[...] = m2
+        cnt_ref[...] = cnt
+
+    @pl.when(j == edge_steps - 1)
+    def _finalize():
+        if agg == "mean":
+            out_ref[...] = out_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+        elif agg in ("min", "max"):
+            o = out_ref[...]
+            out_ref[...] = jnp.where(jnp.isfinite(o), o, 0.0)
+        elif agg in ("var", "std"):
+            var = scratch[2][...] / jnp.maximum(cnt_ref[...], 1.0)
+            var = jnp.maximum(var, 1e-12)   # clamp: sqrt'(0)=inf -> NaNs
+            out_ref[...] = jnp.sqrt(var) if agg == "std" else var
+
+
+def segment_aggregate_pallas(messages, seg_ids, num_segments: int, *,
+                             agg: str = "sum", edge_block: int = 128,
+                             node_block: int = 128,
+                             interpret: bool = True):
+    """messages: (E, F); seg_ids: (E,) int32 destination segment per edge,
+    -1 (or any id outside [0, num_segments)) on padding. Returns
+    (num_segments, F) float32 aggregates; empty segments zero-fill (the
+    var/std clamp floor counts as zero at fp32 tolerance).
+    """
+    assert agg in AGGS, agg
+    e, f = messages.shape
+    eb = min(edge_block, e)
+    nb = min(node_block, num_segments)
+    e_pad = (-e) % eb
+    n_pad = (-num_segments) % nb
+    seg_ids = seg_ids.astype(jnp.int32)
+    # out-of-range ids (packed-batch overflow bucket == num_segments, or
+    # -1 padding) are normalized to -1 so they match no node row
+    seg_ids = jnp.where((seg_ids >= 0) & (seg_ids < num_segments),
+                        seg_ids, -1)
+    if e_pad:
+        messages = jnp.pad(messages, ((0, e_pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, e_pad), constant_values=-1)
+    dst = seg_ids.reshape(1, e + e_pad)
+    grid = ((num_segments + n_pad) // nb, (e + e_pad) // eb)
+    scratch = [pltpu.VMEM((nb, 1), jnp.float32)]
+    if agg in ("var", "std"):
+        scratch += [pltpu.VMEM((nb, f), jnp.float32),
+                    pltpu.VMEM((nb, f), jnp.float32)]
+    out = pl.pallas_call(
+        functools.partial(_seg_kernel, agg=agg, edge_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((eb, f), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, eb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, f), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments + n_pad, f),
+                                       jnp.float32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(messages.astype(jnp.float32), dst)
+    return out[:num_segments]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the segment_aggregate kernel.
+
+Mirrors the kernel's math over the full (num_segments, E) edge->node
+assignment at once: the dense one-hot matmul is the unrolled form of the
+kernel's per-edge-block scatter, and var/std use the per-segment-mean
+two-pass form, which matches Welford to fp32 tolerance (unlike
+E[x^2]-E[x]^2, which loses precision to cancellation).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_aggregate_ref(messages, seg_ids, num_segments: int, *,
+                          agg: str = "sum"):
+    """messages: (E, F); seg_ids: (E,) int32, -1 or out-of-range ids are
+    padding -> (num_segments, F) float32."""
+    m = messages.astype(jnp.float32)
+    seg = seg_ids.astype(jnp.int32)
+    node_ids = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
+    # -1 / out-of-range padding ids match no node row
+    onehot = seg[None, :] == node_ids                # (N, E)
+    onef = onehot.astype(jnp.float32)
+    cnt = onef.sum(1, keepdims=True)                 # (N, 1)
+    s = onef @ m                                     # (N, F)
+    if agg == "sum":
+        return s
+    if agg == "mean":
+        return s / jnp.maximum(cnt, 1.0)
+    if agg in ("min", "max"):
+        neutral = jnp.inf if agg == "min" else -jnp.inf
+        masked = jnp.where(onehot[:, :, None], m[None], neutral)
+        out = masked.min(1) if agg == "min" else masked.max(1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    if agg in ("var", "std"):
+        c = jnp.maximum(cnt, 1.0)
+        mu = s / c                                   # (N, F)
+        dev = m[None] - mu[:, None]                  # (N, E, F)
+        var = jnp.einsum("ne,nef->nf", onef, jnp.square(dev)) / c
+        var = jnp.maximum(var, 1e-12)
+        return jnp.sqrt(var) if agg == "std" else var
+    raise ValueError(agg)

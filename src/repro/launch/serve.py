@@ -10,7 +10,7 @@ GraphBatch programs — one jitted program, budget-sized buffers, reported
 in graphs/s (DESIGN_BATCHING.md).
 
   PYTHONPATH=src python -m repro.launch.serve --gnn --conv gcn \
-      --requests 256 --batch-graphs 32
+      --requests 256 --batch-graphs 32 [--agg-backend pallas]
 """
 from __future__ import annotations
 
@@ -70,9 +70,15 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
 
 def gnn_main(args):
     from repro.configs.gnn import DATASETS, config as gnn_config
+    from repro.core import aggregations as agg_mod
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
 
+    # single-device serving may opt into the fused Pallas segment kernel
+    # (Mosaic-compiled on TPU, interpreted elsewhere — resolved by the
+    # aggregation defaults); the default stays XLA, the safe choice under
+    # pjit and on CPU hosts
+    agg_mod.set_default_backend(args.agg_backend)
     cfg = gnn_config(args.conv, reduced=args.reduced)
     params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
     ds = DATASETS["qm9"]
@@ -109,6 +115,10 @@ def main():
                     choices=["gcn", "sage", "gin", "pna"])
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--batch-graphs", type=int, default=32)
+    ap.add_argument("--agg-backend", default="xla",
+                    choices=["xla", "pallas"],
+                    help="segment-aggregation backend for --gnn serving "
+                         "(pallas = fused edge-block kernel, single-device)")
     args = ap.parse_args()
 
     if args.gnn:

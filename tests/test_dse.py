@@ -62,3 +62,62 @@ def test_sampled_designs_carry_batch_budgets():
     assert d["batch_graphs"] in dse.SPACE["batch_graphs"]
     assert d["node_budget"] >= d["batch_graphs"] * d["avg_nodes"]
     assert d["edge_budget"] >= d["batch_graphs"] * d["avg_edges"]
+
+
+def test_sampled_designs_carry_kernel_tiles():
+    """edge_block/node_block (segment-aggregation tile sizes) are design
+    axes: sampled, featurized, and returned by explore with the
+    feasibility flag intact."""
+    rng = np.random.default_rng(5)
+    ds = [dse.sample_design(rng) for _ in range(64)]
+    assert all(d["edge_block"] in dse.SPACE["edge_block"] for d in ds)
+    assert all(d["node_block"] in dse.SPACE["node_block"] for d in ds)
+    assert len({d["edge_block"] for d in ds}) > 1      # actually sampled
+    models = dse.fit_models(_db())
+    best = dse.explore(models, n_candidates=64, seed=3,
+                       memory_budget=1e18)
+    assert best["feasible"] is True
+    assert best["edge_block"] in dse.SPACE["edge_block"]
+    assert best["node_block"] in dse.SPACE["node_block"]
+
+
+def test_tile_knobs_move_synthesis_objective(tmp_path):
+    """edge_block/node_block must not be inert DSE axes: the packed
+    synthesis report charges per-grid-step overhead, so smaller tiles
+    mean more steps and strictly higher modeled packed latency."""
+    from repro.core import gnn_model as G
+    from repro.core.project import Project
+
+    def report(eb, nb):
+        cfg = G.GNNModelConfig(
+            graph_input_feature_dim=4, graph_input_edge_dim=0,
+            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
+            mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
+                                 hidden_layers=1))
+        proj = Project(f"tiles_{eb}_{nb}", cfg, "dse", str(tmp_path),
+                       max_nodes=64, max_edges=64, batch_graphs=8,
+                       edge_block=eb, node_block=nb)
+        proj.gen_hw_model()
+        return proj.run_synthesis()["packed"]
+
+    small = report(64, 32)
+    large = report(256, 128)
+    assert small["agg_grid_steps"] > large["agg_grid_steps"]
+    assert small["agg_overhead_s"] > large["agg_overhead_s"]
+    assert small["latency_s"] > large["latency_s"]
+    assert small["graphs_per_s"] < large["graphs_per_s"]
+    assert small["edge_block"] == 64 and small["node_block"] == 32
+
+
+def test_features_default_tiles_for_old_databases():
+    """Databases recorded before the tile knobs existed still featurize
+    (defaults 128/128), and the vector length matches FEATURE_NAMES."""
+    from repro.core import perf_model as PM
+    rng = np.random.default_rng(6)
+    d = dse.sample_design(rng)
+    d.pop("edge_block")
+    d.pop("node_block")
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    assert v[PM.FEATURE_NAMES.index("edge_block")] == 128
+    assert v[PM.FEATURE_NAMES.index("node_block")] == 128

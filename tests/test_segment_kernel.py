@@ -1,0 +1,144 @@
+"""Backend equivalence for the packed-COO segment aggregation: the Pallas
+edge-block kernel (interpret mode on CPU) must match the XLA
+jax.ops.segment_* path for all six aggregations, including the Welford
+var/std edge cases — empty segments, all-padding edge blocks, and
+single-edge segments."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import aggregations as A
+from repro.data import pipeline as P
+from repro.kernels.segment_aggregate.ops import (
+    segment_aggregate as pallas_segment_aggregate)
+from repro.kernels.segment_aggregate.ref import segment_aggregate_ref
+
+RNG = np.random.default_rng(17)
+ATOL = 1e-5
+
+
+def _check(agg, msgs, seg, n, valid=None, edge_block=64, node_block=32):
+    got = pallas_segment_aggregate(
+        jnp.asarray(msgs), jnp.asarray(seg),
+        None if valid is None else jnp.asarray(valid),
+        num_segments=n, agg=agg, edge_block=edge_block,
+        node_block=node_block)
+    want = A.segment_aggregate(
+        agg, jnp.asarray(msgs), jnp.asarray(seg), n,
+        None if valid is None else jnp.asarray(valid), backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=ATOL, rtol=1e-4)
+    # ref.py mirrors kernel.py (the kernel-dir contract)
+    seg_eff = np.where(valid, seg, -1) if valid is not None else seg
+    ref = segment_aggregate_ref(jnp.asarray(msgs), jnp.asarray(seg_eff),
+                                n, agg=agg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=ATOL, rtol=1e-4)
+
+
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+@pytest.mark.parametrize("e,f,n,eb,nb", [
+    (200, 16, 40, 64, 32),
+    (77, 9, 33, 32, 32),        # ragged: padding in both axes
+    (128, 8, 8, 128, 128),      # single tile pair
+])
+def test_pallas_matches_xla(agg, e, f, n, eb, nb):
+    msgs = RNG.standard_normal((e, f)).astype(np.float32)
+    # ids cover the overflow-bucket convention (seg == n on padding)
+    seg = RNG.integers(0, n + 1, e).astype(np.int32)
+    valid = RNG.random(e) < 0.8
+    _check(agg, msgs, seg, n, valid, eb, nb)
+
+
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+def test_empty_segments_zero_fill(agg):
+    """Segments with no edges zero-fill on both backends (var/std clamp
+    to 1e-12 -> zero at fp32 tolerance)."""
+    msgs = RNG.standard_normal((32, 5)).astype(np.float32)
+    seg = np.full((32,), 3, np.int32)       # all edges land on segment 3
+    _check(agg, msgs, seg, 8)
+    got = np.asarray(pallas_segment_aggregate(
+        jnp.asarray(msgs), jnp.asarray(seg), num_segments=8, agg=agg,
+        edge_block=32, node_block=8))
+    mask = np.ones(8, bool)
+    mask[3] = False
+    np.testing.assert_allclose(got[mask], 0.0, atol=ATOL)
+
+
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+def test_all_padding_edge_block(agg):
+    """A whole edge block of padding (-1 / overflow ids / invalid) must
+    not perturb the accumulators of other blocks."""
+    eb = 32
+    msgs = RNG.standard_normal((3 * eb, 4)).astype(np.float32)
+    seg = RNG.integers(0, 6, 3 * eb).astype(np.int32)
+    seg[eb:2 * eb] = -1                       # middle block: all padding
+    valid = np.ones(3 * eb, bool)
+    valid[eb:2 * eb] = False
+    _check(agg, msgs, seg, 6, valid, edge_block=eb, node_block=6)
+
+
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+def test_single_edge_segments(agg):
+    """One edge per segment: Welford count==1 path (var/std clamp floor,
+    mean == the message itself)."""
+    n = 12
+    msgs = RNG.standard_normal((n, 7)).astype(np.float32)
+    seg = np.arange(n, dtype=np.int32)
+    _check(agg, msgs, seg, n, edge_block=8, node_block=4)
+    got = np.asarray(pallas_segment_aggregate(
+        jnp.asarray(msgs), jnp.asarray(seg), num_segments=n, agg=agg,
+        edge_block=8, node_block=4))
+    if agg in ("sum", "mean", "min", "max"):
+        np.testing.assert_allclose(got, msgs, atol=ATOL, rtol=1e-5)
+    else:                                     # var=1e-12 clamp, std=1e-6
+        np.testing.assert_allclose(got, 0.0, atol=ATOL)
+
+
+@pytest.mark.parametrize("agg", A.AGGREGATIONS)
+def test_packed_graphbatch_edge_stream(agg):
+    """The real consumer layout: dst ids from a packed GraphBatch's edge
+    buffer, padding edges marked by src == -1."""
+    ds = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
+                           node_feat_dim=6, edge_feat_dim=2, seed=9)
+    graphs = [P.make_graph(ds, i) for i in range(5)]
+    batch, _ = P.pack_graphs(graphs, 128, 256, 8)
+    msgs = RNG.standard_normal((256, 6)).astype(np.float32)
+    dst = batch["edge_index"][:, 1]
+    valid = batch["edge_index"][:, 0] >= 0
+    _check(agg, msgs, dst, 128, valid, edge_block=64, node_block=64)
+
+
+def test_backend_switch_and_default():
+    """core.aggregations dispatches by backend=; set_default_backend /
+    backend_scope flip the process default and restore it."""
+    msgs = jnp.asarray(RNG.standard_normal((40, 3)), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, 10, 40), jnp.int32)
+    want = A.segment_aggregate("mean", msgs, seg, 10, backend="xla")
+    got = A.segment_aggregate("mean", msgs, seg, 10, backend="pallas",
+                              edge_block=32, node_block=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=ATOL)
+    assert A.default_backend() == "xla"
+    with A.backend_scope("pallas", edge_block=16, node_block=8):
+        assert A.default_backend() == "pallas"
+        inner = A.segment_aggregate("sum", msgs, seg, 10)
+        np.testing.assert_allclose(
+            np.asarray(inner),
+            np.asarray(A.segment_aggregate("sum", msgs, seg, 10,
+                                           backend="xla")), atol=ATOL)
+    assert A.default_backend() == "xla"
+    with pytest.raises(ValueError):
+        A.set_default_backend("cuda")
+    with pytest.raises(ValueError):
+        A.segment_aggregate("sum", msgs, seg, 10, backend="nope")
+
+
+def test_use_pallas_false_falls_back_to_ref():
+    msgs = jnp.asarray(RNG.standard_normal((24, 4)), jnp.float32)
+    seg = jnp.asarray(RNG.integers(0, 6, 24), jnp.int32)
+    a = pallas_segment_aggregate(msgs, seg, num_segments=6, agg="var",
+                                 use_pallas=False)
+    b = pallas_segment_aggregate(msgs, seg, num_segments=6, agg="var",
+                                 edge_block=8, node_block=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=ATOL)
