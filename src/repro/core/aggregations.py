@@ -15,7 +15,18 @@ algorithm [37]. We implement the identical math twice:
   kernel, engaged on single-device serving via
   ``set_default_backend``/``--agg-backend``).
 
-Supported: sum, mean, min, max, var, std (matching the paper).
+A third entry point, ``gather_aggregate``, fuses the *gather* stage into
+the same dispatch: it takes the node-feature table plus the raw src/dst
+edge-id streams (and an optional per-edge scale) instead of a
+pre-gathered message tensor. Under ``backend="pallas"`` it lowers to
+``kernels/fused_gather_aggregate`` and the (E, F) message tensor never
+touches HBM — the paper's streamed gather->phi->aggregate pipeline;
+under ``backend="xla"`` it materializes the messages with ``jnp.take``
+and segment-reduces them (the safe pjit path, and the parity oracle).
+
+Supported: sum, mean, min, max, var, std (matching the paper);
+``gather_aggregate`` covers the sum/mean/min/max family that linear-phi
+convs (GCN/SAGE/GIN) lower to.
 """
 from __future__ import annotations
 
@@ -213,6 +224,56 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
     else:
         raise ValueError(agg)
     return out[:num_segments]
+
+
+GATHER_AGGREGATIONS = ("sum", "mean", "min", "max")
+
+
+def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
+                     scale=None, *, backend: str | None = None,
+                     edge_block: int | None = None,
+                     node_block: int | None = None,
+                     interpret: bool | None = None):
+    """Fused gather -> phi -> aggregate over packed COO id streams.
+
+    x: (N, F) node features; src/dst: (E,) int32 endpoint ids (padding:
+    -1, out-of-range, or ``valid == False``); scale: optional (E,)
+    per-edge message scale applied before aggregation (the GCN symmetric
+    norm). Returns (num_segments, F) float32.
+
+    backend=None uses the process default. "pallas" routes through the
+    fused edge-block kernel for sum/mean/min/max — the (E, F) message
+    tensor is never materialized; var/std fall back to the materialized
+    gather + the Pallas segment kernel. "xla" always materializes
+    ``jnp.take(x, src)`` and segment-reduces it — the materialized
+    baseline the fused kernel is numerics-pinned against."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend not in SEGMENT_BACKENDS:
+        raise ValueError(backend)
+    if backend == "pallas" and agg in GATHER_AGGREGATIONS:
+        from repro.kernels.fused_gather_aggregate.ops import (
+            fused_gather_aggregate as _pallas_gather_aggregate)
+        return _pallas_gather_aggregate(
+            x, src, dst, valid, scale, num_segments=num_segments, agg=agg,
+            edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
+            node_block=node_block or _DEFAULT_NODE_BLOCK,
+            interpret=_resolve_interpret(interpret))
+    # materialized path: gather the (E, F) message tensor, then reduce.
+    # Out-of-range ids on *either* stream are padding (same contract as
+    # the fused kernel): clamp before the take so no fill-value NaNs can
+    # leak, and drop the edge via the validity mask.
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    msg = jnp.take(x, jnp.clip(src, 0, x.shape[0] - 1), axis=0)
+    if scale is not None:
+        msg = msg.astype(jnp.float32) * scale[:, None]
+    ok = (src >= 0) & (src < x.shape[0]) \
+        & (dst >= 0) & (dst < num_segments)
+    if valid is not None:
+        ok = ok & valid
+    return segment_aggregate(agg, msg, dst, num_segments, ok,
+                             backend=backend, edge_block=edge_block,
+                             node_block=node_block, interpret=interpret)
 
 
 def segment_counts(seg_ids, num_segments: int, valid=None):

@@ -14,6 +14,17 @@ a packed GraphBatch (many graphs in one flat buffer). A packed batch is
 just the disjoint union graph — edge_index holds *global* node ids, so
 message passing never crosses graph boundaries and the segment reductions
 drop padding edges (src == -1) via ``valid_e``.
+
+Linear-phi convs (GCN/SAGE) additionally carry a *dataflow* choice —
+transform-then-aggregate vs aggregate-then-transform. Because their phi
+commutes with the (linear) aggregation, either order is exact, but the
+edge stream moves ``F_agg``-wide messages, so aggregating at
+``min(F_in, F_out)`` width cuts both per-edge bandwidth and matmul
+traffic (the aggregate-vs-transform reordering of the GNN-acceleration
+survey). ``resolve_dataflow`` picks the cheaper order from a closed-form
+cost model over (in_dim, out_dim, avg_degree); ``dataflow="auto"`` can be
+overridden per layer stack via ``ConvConfig.dataflow`` /
+``GNNModelConfig.gnn_dataflow`` / ``Project(dataflow=...)``.
 """
 from __future__ import annotations
 
@@ -30,6 +41,12 @@ CONV_TYPES = ("gcn", "sage", "gin", "pna")
 PNA_AGGS = ("mean", "min", "max", "std")
 PNA_SCALERS = ("identity", "amplification", "attenuation")
 
+DATAFLOWS = ("auto", "aggregate_first", "transform_first")
+# convs whose phi is a plain linear map: aggregation commutes with the
+# transform, so the planner may reorder them. GIN's gamma-MLP runs after
+# the sum either way and PNA's phi is a per-edge MLP — no freedom there.
+REORDERABLE_CONVS = ("gcn", "sage")
+
 
 @dataclasses.dataclass(frozen=True)
 class ConvConfig:
@@ -42,6 +59,35 @@ class ConvConfig:
     p_in: int = 1
     p_out: int = 1
     delta: float = 1.0        # PNA log-degree normalizer (avg log degree)
+    # transform/aggregate ordering for linear convs (resolve_dataflow)
+    dataflow: str = "auto"
+    avg_degree: float = 2.0   # dataset statistic driving the cost model
+
+
+def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float) -> dict:
+    """Per-node cost (fp32 words moved through the edge pipeline + MACs/F)
+    of each ordering. The W matmul costs ``in_dim * out_dim`` MACs per
+    node either way; the edge stream carries ``avg_degree`` messages per
+    node at the aggregation width — F_in when aggregating first, F_out
+    when transforming first. The degree scales how much the reordering
+    matters; the sign of the difference is ``out_dim - in_dim``."""
+    matmul = in_dim * out_dim
+    return {"aggregate_first": avg_degree * in_dim + matmul,
+            "transform_first": avg_degree * out_dim + matmul}
+
+
+def resolve_dataflow(cfg: ConvConfig) -> str:
+    """Planner: the concrete ordering this conv layer executes with."""
+    if cfg.dataflow not in DATAFLOWS:
+        raise ValueError(cfg.dataflow)
+    if cfg.conv not in REORDERABLE_CONVS:
+        return "aggregate_first"
+    if cfg.dataflow != "auto":
+        return cfg.dataflow
+    cost = dataflow_cost(cfg.in_dim, cfg.out_dim, cfg.avg_degree)
+    return "transform_first" \
+        if cost["transform_first"] < cost["aggregate_first"] \
+        else "aggregate_first"
 
 
 def _gather(x, idx):
@@ -53,6 +99,30 @@ def edge_endpoints(g):
     return g["edge_index"][:, 0], g["edge_index"][:, 1]
 
 
+def gcn_normalization(edge_index, in_deg, valid=None):
+    """Precompute the GCN symmetric-norm scales from static graph fields:
+    per-edge ``1/sqrt(d_u d_v)`` and per-node self-loop ``1/d_v``
+    (degrees include the self loop). Hoisted out of ``gcn_apply`` so a
+    layer stack computes it once per batch — ``graph_inputs`` /
+    ``packed_inputs`` stash the result on ``g`` as ``gcn_edge_scale`` /
+    ``gcn_self_scale``, shared by the fused and materialized paths."""
+    src, dst = edge_index[:, 0], edge_index[:, 1]
+    if valid is None:
+        valid = src >= 0
+    inv = jax.lax.rsqrt(jnp.maximum(in_deg + 1.0, 1e-12))
+    edge_scale = _gather(inv, src) * _gather(inv, dst)
+    edge_scale = jnp.where(valid, edge_scale, 0.0)
+    return edge_scale, inv * inv
+
+
+def _gcn_scales(g):
+    es, ss = g.get("gcn_edge_scale"), g.get("gcn_self_scale")
+    if es is None or ss is None:    # direct conv_apply callers
+        es, ss = gcn_normalization(g["edge_index"], g["in_deg"],
+                                   g.get("valid_e"))
+    return es, ss
+
+
 # ------------------------------------------------------------------ GCN --
 def gcn_plan(cfg: ConvConfig, dtype=jnp.float32):
     return {"w": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
@@ -60,15 +130,23 @@ def gcn_plan(cfg: ConvConfig, dtype=jnp.float32):
 
 
 def gcn_apply(params, g, x, cfg: ConvConfig):
-    """x' = W (sum_u x_u / sqrt(d_u d_v)) + b  (self loops included)."""
+    """x' = W (sum_u x_u / sqrt(d_u d_v)) + b  (self loops included).
+
+    The symmetric norm is a per-edge scalar, so the whole layer is
+    W A x for a fixed weighted adjacency A — ``resolve_dataflow`` picks
+    W (A x) + b (aggregate_first) or A (W x) + b (transform_first); both
+    lower through the fused gather->scale->aggregate pipeline."""
     src, dst = edge_endpoints(g)
     n = x.shape[0]
-    deg = g["in_deg"] + 1.0                       # +1 for self loop
-    inv = jax.lax.rsqrt(jnp.maximum(deg, 1e-12))
-    msg = _gather(x * inv[:, None], src)          # phi: normalized gather
-    aggr = agg_mod.segment_aggregate("sum", msg, dst, n, g["valid_e"])
-    aggr = (aggr + x * inv[:, None]) * inv[:, None]   # self loop + norm
-    return linear(params["w"], aggr.astype(x.dtype))  # gamma
+    edge_scale, self_scale = _gcn_scales(g)
+    h = x if resolve_dataflow(cfg) == "aggregate_first" \
+        else x @ params["w"]["w"]                 # transform at min width
+    aggr = agg_mod.gather_aggregate("sum", h, src, dst, n, g["valid_e"],
+                                    edge_scale)
+    aggr = aggr + h.astype(jnp.float32) * self_scale[:, None]  # self loop
+    if h is x:
+        return linear(params["w"], aggr.astype(x.dtype))       # gamma
+    return aggr.astype(x.dtype) + params["w"]["b"]
 
 
 # ------------------------------------------------------------ GraphSAGE --
@@ -82,13 +160,18 @@ def sage_plan(cfg: ConvConfig, dtype=jnp.float32):
 
 
 def sage_apply(params, g, x, cfg: ConvConfig):
-    """x' = W1 x_v + W2 mean_u(x_u)  (flexible aggregation family)."""
+    """x' = W1 x_v + W2 mean_u(x_u)  (flexible aggregation family).
+
+    mean is linear, so W2 mean(x_u) == mean(W2 x_u) exactly —
+    ``resolve_dataflow`` aggregates at min(F_in, F_out) width."""
     src, dst = edge_endpoints(g)
-    msg = _gather(x, src)
-    aggr = agg_mod.segment_aggregate("mean", msg, dst, x.shape[0],
-                                     g["valid_e"])
-    return linear(params["w_self"], x) \
-        + linear(params["w_neigh"], aggr.astype(x.dtype))
+    h = x if resolve_dataflow(cfg) == "aggregate_first" \
+        else x @ params["w_neigh"]["w"]
+    aggr = agg_mod.gather_aggregate("mean", h, src, dst, x.shape[0],
+                                    g["valid_e"])
+    neigh = linear(params["w_neigh"], aggr.astype(x.dtype)) if h is x \
+        else aggr.astype(x.dtype)
+    return linear(params["w_self"], x) + neigh
 
 
 # ------------------------------------------------------------- GIN(E) ---
@@ -110,11 +193,16 @@ def gin_apply(params, g, x, cfg: ConvConfig):
     """x' = MLP((1+eps) x_v + sum_u relu(x_u + W_e e_uv)) — edge features
     make this inexpressible as SpMM (paper Table II)."""
     src, dst = edge_endpoints(g)
-    msg = _gather(x, src)
     if "w_edge" in params:
-        msg = jax.nn.relu(msg + linear(params["w_edge"], g["edge_feat"]))
-    aggr = agg_mod.segment_aggregate("sum", msg, dst, x.shape[0],
-                                     g["valid_e"])
+        # edge-feature phi is nonlinear per edge: keep the materialized
+        # message path (the fused kernel's scale slot cannot express it)
+        msg = jax.nn.relu(_gather(x, src)
+                          + linear(params["w_edge"], g["edge_feat"]))
+        aggr = agg_mod.segment_aggregate("sum", msg, dst, x.shape[0],
+                                         g["valid_e"])
+    else:
+        aggr = agg_mod.gather_aggregate("sum", x, src, dst, x.shape[0],
+                                        g["valid_e"])
     h = (1.0 + params["eps"]) * x + aggr.astype(x.dtype)
     h = act(cfg.activation)(linear(params["mlp1"], h))
     return linear(params["mlp2"], h)

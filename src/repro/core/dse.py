@@ -47,6 +47,10 @@ SPACE = {
     "batch_graphs": [8, 16, 32, 64],
     "edge_block": [64, 128, 256],
     "node_block": [32, 64, 128],
+    # transform/aggregate ordering for the linear convs
+    # (convs.resolve_dataflow): "auto" defers to the closed-form cost
+    # model, the explicit values pin one ordering for the whole stack
+    "dataflow": ["auto", "aggregate_first", "transform_first"],
 }
 
 
@@ -96,7 +100,9 @@ def design_to_config(d: dict) -> G.GNNModelConfig:
                              p_out=d["mlp_p_out"]),
         gnn_p_in=d["gnn_p_in"], gnn_p_hidden=d["gnn_p_hidden"],
         gnn_p_out=d["gnn_p_out"],
-        pna_delta=float(np.log(d["avg_degree"] + 1.0)))
+        pna_delta=float(np.log(d["avg_degree"] + 1.0)),
+        gnn_dataflow=d.get("dataflow", "auto"),
+        avg_degree=float(d["avg_degree"]))
 
 
 def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,

@@ -54,6 +54,11 @@ class GNNModelConfig:
     gnn_p_hidden: int = 8
     gnn_p_out: int = 4
     pna_delta: float = 1.0
+    # transform/aggregate ordering for the linear convs (convs.DATAFLOWS);
+    # "auto" lets the per-layer cost model pick, the explicit values
+    # force one ordering for the whole stack
+    gnn_dataflow: str = "auto"
+    avg_degree: float = 2.0
 
     def conv_cfg(self, layer: int) -> C.ConvConfig:
         ind = self.graph_input_feature_dim if layer == 0 \
@@ -67,7 +72,9 @@ class GNNModelConfig:
                             edge_dim=self.graph_input_edge_dim,
                             conv=self.gnn_conv,
                             activation=self.gnn_activation,
-                            p_in=p_in, p_out=p_out, delta=self.pna_delta)
+                            p_in=p_in, p_out=p_out, delta=self.pna_delta,
+                            dataflow=self.gnn_dataflow,
+                            avg_degree=self.avg_degree)
 
     @property
     def pooled_dim(self) -> int:
@@ -120,9 +127,13 @@ def graph_inputs(batch_el: dict) -> tuple:
     node_mask = jnp.arange(n_max) < num_nodes
     from repro.core.aggregations import degrees
     indeg, outdeg = degrees(edge_index, n_max, valid_e)
+    edge_scale, self_scale = C.gcn_normalization(edge_index, indeg, valid_e)
     g = {"edge_index": edge_index, "edge_feat": batch_el.get("edge_feat"),
          "valid_e": valid_e, "in_deg": indeg, "out_deg": outdeg,
-         "num_nodes": num_nodes}
+         "num_nodes": num_nodes,
+         # GCN symmetric-norm scales, hoisted: derived once per batch
+         # from static graph fields instead of twice per layer stack
+         "gcn_edge_scale": edge_scale, "gcn_self_scale": self_scale}
     return g, x, node_mask
 
 
@@ -145,9 +156,11 @@ def packed_inputs(batch: dict) -> tuple:
     valid_e = edge_index[:, 0] >= 0
     from repro.core.aggregations import degrees
     indeg, outdeg = degrees(edge_index, x.shape[0], valid_e)
+    edge_scale, self_scale = C.gcn_normalization(edge_index, indeg, valid_e)
     g = {"edge_index": edge_index, "edge_feat": batch.get("edge_feat"),
          "valid_e": valid_e, "in_deg": indeg, "out_deg": outdeg,
-         "num_nodes": jnp.sum(node_mask.astype(jnp.int32))}
+         "num_nodes": jnp.sum(node_mask.astype(jnp.int32)),
+         "gcn_edge_scale": edge_scale, "gcn_self_scale": self_scale}
     return g, x, node_mask, graph_id
 
 

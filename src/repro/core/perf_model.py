@@ -12,7 +12,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.convs import CONV_TYPES
+from repro.core.convs import CONV_TYPES, ConvConfig, resolve_dataflow
 
 
 # -------------------------------------------------------- decision tree --
@@ -167,7 +167,26 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     "batch_graphs", "node_budget", "edge_budget",
     # segment-aggregation kernel tile sizes (Pallas edge/node blocks)
     "edge_block", "node_block",
+    # transform/aggregate reordering: the explicit setting (one-hot;
+    # "auto" = both zero) plus the *resolved* aggregation width of the
+    # final conv layer, so the forests price the edge-bandwidth cut
+    "dataflow_aggregate_first", "dataflow_transform_first",
+    "agg_width_last",
 ]
+
+
+def _resolved_agg_width(design: dict) -> float:
+    """Aggregation width of the final conv layer after the dataflow
+    planner runs — delegates to convs.resolve_dataflow so the feature
+    can never desynchronize from the ordering a design executes with."""
+    hid = design["gnn_hidden_dim"] if design["gnn_layers"] > 1 \
+        else design["in_dim"]
+    out = design["gnn_out_dim"]
+    cc = ConvConfig(in_dim=hid, out_dim=out, conv=design["conv"],
+                    dataflow=design.get("dataflow", "auto"),
+                    avg_degree=float(design.get("avg_degree", 2.0)))
+    return float(out if resolve_dataflow(cc) == "transform_first"
+                 else hid)
 
 
 def features(design: dict) -> np.ndarray:
@@ -189,4 +208,7 @@ def features(design: dict) -> np.ndarray:
         design.get("edge_budget", design["avg_edges"]),
         design.get("edge_block", 128),
         design.get("node_block", 128),
+        1.0 if design.get("dataflow") == "aggregate_first" else 0.0,
+        1.0 if design.get("dataflow") == "transform_first" else 0.0,
+        _resolved_agg_width(design),
     ], dtype=float)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import convs as Cv
 from repro.core import gnn_model as G
 from repro.core import quantization as Q
 from repro.data import pipeline as data_mod
@@ -65,9 +66,14 @@ class Project:
                  node_budget: int | None = None,
                  edge_budget: int | None = None,
                  edge_block: int = 128, node_block: int = 128,
-                 agg_backend: str = "xla"):
+                 agg_backend: str = "xla", dataflow: str | None = None):
         self.name = name
-        self.cfg = model_cfg
+        # dataflow override + dataset degree flow into the per-layer
+        # transform/aggregate planner (convs.resolve_dataflow)
+        cfg_updates = {"avg_degree": float(degree_guess)}
+        if dataflow is not None:
+            cfg_updates["gnn_dataflow"] = dataflow
+        self.cfg = dataclasses.replace(model_cfg, **cfg_updates)
         self.task = task
         self.build_dir = build_dir
         self.dataset_cfg = dataset_cfg or data_mod.GraphDataConfig(
@@ -143,7 +149,11 @@ class Project:
                        "edge_budget": self.edge_budget,
                        "edge_block": self.edge_block,
                        "node_block": self.node_block,
-                       "agg_backend": self.agg_backend},
+                       "agg_backend": self.agg_backend,
+                       "dataflow": cfg.gnn_dataflow,
+                       "dataflow_per_layer": [
+                           Cv.resolve_dataflow(cfg.conv_cfg(i))
+                           for i in range(cfg.gnn_num_layers)]},
                       f, indent=1, default=str)
         return self._fn
 

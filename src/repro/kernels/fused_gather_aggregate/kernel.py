@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: fused gather -> phi -> aggregate over packed COO.
+
+GNNBuilder's core dataflow claim (paper SV-A, Fig. 3) is that messages
+*stream* through the gather -> phi -> aggregate pipeline instead of being
+materialized. The `segment_aggregate` kernel (PR 2) fused only the
+aggregate stage: every conv still wrote an (E, F) message tensor to HBM
+via `jnp.take` before reducing it. This kernel closes that seam for the
+linear-phi family (GCN / SAGE / GIN-without-edge-MLP): it consumes the
+node-feature table (N, F) plus the raw `src`/`dst` edge-id streams and an
+optional per-edge scale (the GCN 1/sqrt(d_u d_v) norm), gathers source
+rows *inside* the edge-block loop, and folds them straight into the VMEM
+node accumulator — the (E, F) message tensor never touches HBM.
+
+Grid: (node_tiles, edge_tiles) — the edge axis is innermost/sequential,
+so each node tile's accumulator persists in VMEM across the whole edge
+stream (same schedule as `segment_aggregate`). Block shapes:
+  x     (N, F)   — the full node-feature table, resident across steps
+  src   (1, EB)  — source node ids (-1 = padding, gathers a zero row)
+  dst   (1, EB)  — destination ids (-1 = padding, matches no node row)
+  scale (1, EB)  — per-edge message scale (1.0 when unused, 0 on padding)
+  out   (NB, F)  — this node tile's aggregate (revisited across j)
+Scratch: count (NB, 1).
+
+The gather itself is routed through the MXU: a (N, EB) source one-hot
+(with the edge scale folded in, so phi costs nothing extra) contracted
+against the node table yields the edge block's scaled messages without a
+serial gather loop; the scatter side reuses the segment kernel's
+destination one-hot matmul / fori-loop updates.
+
+Supported: sum, mean, min, max — the family GCN/SAGE/GIN lower to.
+var/std (PNA towers) and per-edge MLPs keep the materialized path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+AGGS = ("sum", "mean", "min", "max")
+
+
+def _fused_kernel(x_ref, src_ref, dst_ref, scale_ref, out_ref, cnt_ref, *,
+                  agg: str, edge_steps: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nb, f = out_ref.shape
+    eb = src_ref.shape[1]
+    n_src = x_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        if agg in ("sum", "mean"):
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif agg == "min":
+            out_ref[...] = jnp.full(out_ref.shape, jnp.inf, out_ref.dtype)
+        else:
+            out_ref[...] = jnp.full(out_ref.shape, -jnp.inf, out_ref.dtype)
+
+    # gather prologue: (N, EB) source one-hot with the per-edge scale
+    # folded in, contracted against the node table on the MXU. Padding
+    # edges (src == -1) match no row and gather an all-zero message.
+    node_rows = jax.lax.broadcasted_iota(jnp.int32, (n_src, 1), 0)
+    src_onehot = (src_ref[...] == node_rows).astype(jnp.float32) \
+        * scale_ref[...].astype(jnp.float32)
+    msg = jax.lax.dot_general(
+        src_onehot, x_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (EB, F)
+
+    # (NB, EB) edge->node assignment for this tile pair; padding edges
+    # carry dst == -1 and match no node row.
+    node_ids = i * nb + jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+    onehot = dst_ref[...] == node_ids
+
+    if agg in ("sum", "mean"):
+        onef = onehot.astype(jnp.float32)
+        out_ref[...] += jnp.dot(onef, msg,
+                                preferred_element_type=jnp.float32)
+        cnt_ref[...] += jnp.sum(onef, axis=1, keepdims=True)
+    else:
+        def body(e, state):
+            acc, cnt = state
+            sel = jax.lax.dynamic_slice(onehot, (0, e), (nb, 1))
+            row = jax.lax.dynamic_slice(msg, (e, 0), (1, f))
+            upd = jnp.minimum(acc, row) if agg == "min" \
+                else jnp.maximum(acc, row)
+            return (jnp.where(sel, upd, acc),
+                    cnt + sel.astype(jnp.float32))
+        acc, cnt = jax.lax.fori_loop(
+            0, eb, body, (out_ref[...], cnt_ref[...]))
+        out_ref[...] = acc
+        cnt_ref[...] = cnt
+
+    @pl.when(j == edge_steps - 1)
+    def _finalize():
+        if agg == "mean":
+            out_ref[...] = out_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+        elif agg in ("min", "max"):
+            o = out_ref[...]
+            out_ref[...] = jnp.where(jnp.isfinite(o), o, 0.0)
+
+
+def fused_gather_aggregate_pallas(x, src, dst, num_segments: int, *,
+                                  scale=None, agg: str = "sum",
+                                  edge_block: int = 128,
+                                  node_block: int = 128,
+                                  interpret: bool = True):
+    """x: (N, F) node features; src/dst: (E,) int32 endpoint id streams
+    of the packed COO edge buffer (-1 or any out-of-range id = padding);
+    scale: optional (E,) per-edge message scale (phi), applied before
+    aggregation. Returns (num_segments, F) float32 aggregates; empty
+    segments zero-fill. The (E, F) message tensor is never materialized.
+    """
+    assert agg in AGGS, agg
+    n_src, f = x.shape
+    e = src.shape[0]
+    if e == 0 or num_segments == 0:
+        return jnp.zeros((num_segments, f), jnp.float32)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    # out-of-range ids (packed-batch overflow bucket, -1 padding) are
+    # normalized to -1 on *both* streams so a bad edge neither gathers
+    # nor scatters
+    bad = (src < 0) | (src >= n_src) | (dst < 0) | (dst >= num_segments)
+    src = jnp.where(bad, -1, src)
+    dst = jnp.where(bad, -1, dst)
+    if scale is None:
+        scale = jnp.ones((e,), jnp.float32)
+    scale = jnp.where(bad, 0.0, scale.astype(jnp.float32))
+    eb = min(edge_block, e)
+    nb = min(node_block, num_segments)
+    e_pad = (-e) % eb
+    n_pad = (-num_segments) % nb
+    if e_pad:
+        src = jnp.pad(src, (0, e_pad), constant_values=-1)
+        dst = jnp.pad(dst, (0, e_pad), constant_values=-1)
+        scale = jnp.pad(scale, (0, e_pad))
+    grid = ((num_segments + n_pad) // nb, (e + e_pad) // eb)
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, agg=agg, edge_steps=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_src, f), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, eb), lambda i, j: (0, j)),
+            pl.BlockSpec((1, eb), lambda i, j: (0, j)),
+            pl.BlockSpec((1, eb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((nb, f), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments + n_pad, f),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32), src.reshape(1, e + e_pad),
+      dst.reshape(1, e + e_pad), scale.reshape(1, e + e_pad))
+    return out[:num_segments]

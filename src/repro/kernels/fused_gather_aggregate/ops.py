@@ -1,0 +1,43 @@
+"""jit'd public wrapper for fused_gather_aggregate."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_gather_aggregate.kernel import (
+    fused_gather_aggregate_pallas)
+from repro.kernels.fused_gather_aggregate.ref import (
+    fused_gather_aggregate_ref)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "agg", "edge_block",
+                                   "node_block", "use_pallas", "interpret"))
+def fused_gather_aggregate(x, src, dst, valid=None, scale=None, *,
+                           num_segments: int, agg: str = "sum",
+                           edge_block: int = 128, node_block: int = 128,
+                           use_pallas: bool = True, interpret: bool = True):
+    """Gather source-node rows and aggregate them per destination segment
+    in one fused pass — the (E, F) message tensor never reaches HBM.
+
+    x (N, F); src/dst (E,) int32 endpoint id streams of the packed COO
+    edge buffer, with padding marked by -1, any out-of-range id, or
+    ``valid == False``; scale: optional (E,) per-edge message scale (the
+    GCN symmetric norm). Returns (num_segments, F) float32.
+
+    use_pallas=False falls back to the pure-jnp mirror oracle (ref.py) —
+    a testing aid whose dense (N, E) / (N, E, F) intermediates do not
+    scale to production buffers. The production fallback under pjit is
+    ``core.aggregations.gather_aggregate(backend="xla")``, which
+    materializes the messages and segment-reduces them."""
+    src = src.astype(jnp.int32)
+    if valid is not None:
+        src = jnp.where(valid, src, -1)
+    if use_pallas:
+        return fused_gather_aggregate_pallas(
+            x, src, dst, num_segments, scale=scale, agg=agg,
+            edge_block=edge_block, node_block=node_block,
+            interpret=interpret)
+    return fused_gather_aggregate_ref(x, src, dst, num_segments,
+                                      scale=scale, agg=agg)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused_gather_aggregate kernel.
+
+Mirrors the kernel's math over the full edge stream at once: the same
+(N_src, E) scaled source one-hot contraction performs the gather+phi, and
+the same (num_segments, E) destination one-hot performs the scatter —
+identical masking rules (out-of-range ids on either stream kill the whole
+edge), identical neutral elements, identical zero-fill for empty
+segments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_gather_aggregate_ref(x, src, dst, num_segments: int, *,
+                               scale=None, agg: str = "sum"):
+    """x: (N, F); src/dst: (E,) int32 (-1 / out-of-range = padding);
+    scale: optional (E,) -> (num_segments, F) float32."""
+    xf = x.astype(jnp.float32)
+    n_src, _ = xf.shape
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    bad = (src < 0) | (src >= n_src) | (dst < 0) | (dst >= num_segments)
+    src = jnp.where(bad, -1, src)
+    dst = jnp.where(bad, -1, dst)
+    if scale is None:
+        scale = jnp.ones(src.shape, jnp.float32)
+    scale = jnp.where(bad, 0.0, scale.astype(jnp.float32))
+    # gather + phi: (N_src, E) scaled one-hot contracted with the table
+    rows = jnp.arange(n_src, dtype=jnp.int32)[:, None]
+    src_onehot = (src[None, :] == rows).astype(jnp.float32) * scale[None, :]
+    msg = src_onehot.T @ xf                           # (E, F)
+    # scatter: (num_segments, E) destination one-hot
+    node_ids = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
+    onehot = dst[None, :] == node_ids
+    onef = onehot.astype(jnp.float32)
+    cnt = onef.sum(1, keepdims=True)
+    if agg == "sum":
+        return onef @ msg
+    if agg == "mean":
+        return (onef @ msg) / jnp.maximum(cnt, 1.0)
+    if agg in ("min", "max"):
+        neutral = jnp.inf if agg == "min" else -jnp.inf
+        masked = jnp.where(onehot[:, :, None], msg[None], neutral)
+        out = masked.min(1) if agg == "min" else masked.max(1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(agg)

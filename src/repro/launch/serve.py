@@ -7,14 +7,18 @@ LM mode (default): prefill + decode loop with donated KV caches.
 
 GNN mode (--gnn): drains a graph request queue through fixed-shape packed
 GraphBatch programs — one jitted program, budget-sized buffers, reported
-in graphs/s (DESIGN_BATCHING.md).
+in graphs/s (DESIGN_BATCHING.md). Requests too large for the packed
+budgets are answered through the padded per-graph oracle instead of being
+dropped (fallback count lands in stats).
 
   PYTHONPATH=src python -m repro.launch.serve --gnn --conv gcn \
-      --requests 256 --batch-graphs 32 [--agg-backend pallas]
+      --requests 256 --batch-graphs 32 [--agg-backend pallas] \
+      [--dataflow auto|aggregate_first|transform_first]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -38,14 +42,20 @@ def pad_caches(prefill_caches, full_caches):
 
 
 def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
-                    batch_graphs: int):
+                    batch_graphs: int, fallback_fn=None):
     """Drain ``queue`` (a list of data.pipeline.Graph requests) through
     the packed program ``fn``; every call sees the same static shapes, so
-    XLA compiles exactly once. Returns (outputs per batch, stats)."""
+    XLA compiles exactly once. Returns (outputs per batch, stats).
+
+    Graphs too large for the packed budgets cannot ride a GraphBatch.
+    With ``fallback_fn`` (the padded per-graph oracle ``G.apply``) they
+    are answered one at a time through it instead of being dropped —
+    every request gets a response; the fallback count is reported in
+    stats. Without it they are dropped and counted, as before."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
-    batches, dropped = P.pack_dataset(queue, node_budget, edge_budget,
-                                      batch_graphs)
+    batches, oversize = P.pack_dataset(queue, node_budget, edge_budget,
+                                       batch_graphs)
     outs = []
     served = 0
     slots_used = 0
@@ -54,18 +64,29 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
         outs.append(fn(params, G.packed_to_device(b)))
         served += int(b["num_graphs"])
         slots_used += int((b["node_graph_id"] < batch_graphs).sum())
-    jax.block_until_ready(outs)
+    fallback_outs = []
+    if fallback_fn is not None:
+        for g in oversize:
+            el = {"node_feat": jnp.asarray(g.node_feat),
+                  "edge_index": jnp.asarray(g.edge_index),
+                  "edge_feat": jnp.asarray(g.edge_feat),
+                  "num_nodes": jnp.int32(g.num_nodes)}
+            fallback_outs.append(fallback_fn(params, el))
+    jax.block_until_ready(outs + fallback_outs)
     total_s = time.perf_counter() - t0
+    n_fallback = len(fallback_outs)
     stats = {
-        "served": served,
-        "dropped": len(dropped),
+        "served": served + n_fallback,
+        "packed_served": served,
+        "fallback_served": n_fallback,
+        "dropped": len(oversize) - n_fallback,
         "n_batches": len(batches),
-        "graphs_per_s": served / max(total_s, 1e-12),
+        "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
         "node_slot_utilization":
             slots_used / max(len(batches) * node_budget, 1),
         "total_s": total_s,
     }
-    return outs, stats
+    return outs + fallback_outs, stats
 
 
 def gnn_main(args):
@@ -80,24 +101,30 @@ def gnn_main(args):
     # pjit and on CPU hosts
     agg_mod.set_default_backend(args.agg_backend)
     cfg = gnn_config(args.conv, reduced=args.reduced)
-    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
     ds = DATASETS["qm9"]
+    cfg = dataclasses.replace(cfg, gnn_dataflow=args.dataflow,
+                              avg_degree=float(ds.avg_degree))
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
     queue = [P.make_graph(ds, i) for i in range(args.requests)]
     node_budget = P.size_budget(args.batch_graphs, ds.avg_nodes)
     edge_budget = P.size_budget(args.batch_graphs,
                                 ds.avg_nodes * ds.avg_degree)
     fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    # oversize requests fall back to the padded per-graph oracle so every
+    # request is answered, not silently dropped
+    fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el))
 
     # warmup: compile the single fixed-shape program
     warm = queue[:args.batch_graphs]
     _, _ = drain_gnn_queue(fn, params, warm, node_budget, edge_budget,
-                           args.batch_graphs)
+                           args.batch_graphs, fallback_fn)
     _, stats = drain_gnn_queue(fn, params, queue, node_budget, edge_budget,
-                               args.batch_graphs)
+                               args.batch_graphs, fallback_fn)
     print(f"conv={args.conv} served {stats['served']} graphs in "
           f"{stats['n_batches']} packed batches "
           f"({stats['graphs_per_s']:.0f} graphs/s, node-slot utilization "
           f"{stats['node_slot_utilization'] * 100:.0f}%, "
+          f"{stats['fallback_served']} oversize via padded fallback, "
           f"dropped {stats['dropped']})")
     return stats
 
@@ -119,6 +146,10 @@ def main():
                     choices=["xla", "pallas"],
                     help="segment-aggregation backend for --gnn serving "
                          "(pallas = fused edge-block kernel, single-device)")
+    ap.add_argument("--dataflow", default="auto",
+                    choices=["auto", "aggregate_first", "transform_first"],
+                    help="transform/aggregate ordering for linear convs "
+                         "(auto = per-layer cost model)")
     args = ap.parse_args()
 
     if args.gnn:

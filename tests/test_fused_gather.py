@@ -1,0 +1,336 @@
+"""Fused gather->phi->aggregate pipeline: kernel == ref == materialized
+XLA across aggregations/shapes/scales, fused-vs-materialized parity for
+all four convs on packed batches (empty graphs, all-padding edge blocks,
+isolated nodes), dataflow planner resolution and override combinations,
+and the serve-path oversize fallback."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregations as A
+from repro.core import convs as C
+from repro.core import gnn_model as G
+from repro.core.aggregations import GATHER_AGGREGATIONS
+from repro.data import pipeline as P
+from repro.kernels.fused_gather_aggregate.ops import fused_gather_aggregate
+from repro.kernels.fused_gather_aggregate.ref import (
+    fused_gather_aggregate_ref)
+from repro.nn import param as prm
+
+DS = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
+                       node_feat_dim=11, edge_feat_dim=4, seed=5)
+
+
+def _cfg(conv, dataflow="auto", hidden=16, out=8, task="graph"):
+    return G.GNNModelConfig(
+        graph_input_feature_dim=11, graph_input_edge_dim=4,
+        gnn_hidden_dim=hidden, gnn_num_layers=2, gnn_output_dim=out,
+        gnn_conv=conv, gnn_dataflow=dataflow, task=task,
+        mlp_head=G.MLPConfig(in_dim=out * 3, out_dim=1, hidden_dim=8,
+                             hidden_layers=1) if task == "graph" else None)
+
+
+def _empty_edge_graph(n=3):
+    nf = np.zeros((DS.max_nodes, DS.node_feat_dim), np.float32)
+    nf[:n] = np.random.default_rng(7).standard_normal(
+        (n, DS.node_feat_dim))
+    return P.Graph(node_feat=nf,
+                   edge_index=np.full((DS.max_edges, 2), -1, np.int32),
+                   edge_feat=np.zeros((DS.max_edges, DS.edge_feat_dim),
+                                      np.float32),
+                   num_nodes=n, num_edges=0,
+                   y=np.zeros((1,), np.float32))
+
+
+def _packed_batch():
+    """5 synthetic graphs + one zero-edge graph (isolated nodes) packed
+    into a 128-node/256-edge buffer: the tail edge blocks of the packed
+    stream are pure padding."""
+    gs = [P.make_graph(DS, i) for i in range(5)]
+    gs.insert(2, _empty_edge_graph())
+    batch, k = P.pack_graphs(gs, 128, 256, 8)
+    assert k == len(gs)
+    return gs, {kk: jnp.asarray(v) for kk, v in batch.items() if kk != "y"}
+
+
+def _stream(n=37, e=91, f=5, seed=0, pad_every=7):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, f)), jnp.float32)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    if pad_every:
+        src[::pad_every] = -1
+        dst[::pad_every] = -1
+    scale = jnp.asarray(rng.uniform(0.5, 2.0, e), jnp.float32)
+    return x, jnp.asarray(src), jnp.asarray(dst), scale
+
+
+# ------------------------------------------------- kernel-level parity --
+@pytest.mark.parametrize("agg", GATHER_AGGREGATIONS)
+@pytest.mark.parametrize("with_scale", [False, True])
+def test_kernel_matches_ref_and_materialized(agg, with_scale):
+    """Fused kernel == pure-jnp mirror == gather-then-segment XLA, on a
+    non-divisible shape with interleaved padding edges."""
+    x, src, dst, scale = _stream()
+    sc = scale if with_scale else None
+    got = np.asarray(fused_gather_aggregate(
+        x, src, dst, None, sc, num_segments=37, agg=agg,
+        edge_block=16, node_block=8))
+    ref = np.asarray(fused_gather_aggregate_ref(
+        x, src, dst, 37, scale=sc, agg=agg))
+    xla = np.asarray(A.gather_aggregate(
+        agg, x, src, dst, 37, scale=sc, backend="xla"))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    np.testing.assert_allclose(got, xla, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", GATHER_AGGREGATIONS)
+def test_kernel_all_padding_edge_blocks(agg):
+    """Edge blocks made entirely of padding contribute nothing, and
+    zero-in-degree nodes zero-fill."""
+    x, src, dst, _ = _stream(n=12, e=64, f=3, pad_every=0)
+    src = np.asarray(src).copy()
+    dst = np.asarray(dst).copy()
+    src[16:] = -1            # blocks 2..4 of edge_block=16: all padding
+    dst[16:] = -1
+    dst[:16] = np.arange(16) % 5         # nodes 5..11 isolated
+    got = np.asarray(fused_gather_aggregate(
+        x, jnp.asarray(src), jnp.asarray(dst), num_segments=12, agg=agg,
+        edge_block=16, node_block=8))
+    xla = np.asarray(A.gather_aggregate(
+        agg, x, jnp.asarray(src), jnp.asarray(dst), 12, backend="xla"))
+    np.testing.assert_allclose(got, xla, atol=1e-5)
+    np.testing.assert_allclose(got[5:], 0.0, atol=1e-6)
+
+
+def test_kernel_empty_stream_and_valid_mask():
+    x, src, dst, scale = _stream(e=24, pad_every=0)
+    z = np.asarray(fused_gather_aggregate(
+        x, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+        num_segments=37, agg="sum"))
+    assert z.shape == (37, 5) and np.abs(z).max() == 0.0
+    # valid=False edges are dropped exactly like -1 ids
+    valid = jnp.asarray(np.arange(24) % 3 != 0)
+    got = np.asarray(fused_gather_aggregate(
+        x, src, dst, valid, scale, num_segments=37, agg="sum"))
+    src2 = jnp.where(valid, src, -1)
+    want = np.asarray(A.gather_aggregate(
+        "sum", x, src2, dst, 37, scale=scale, backend="xla"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("agg", GATHER_AGGREGATIONS)
+def test_backends_agree_on_out_of_range_ids(agg):
+    """Ids outside the valid range on *either* stream — high (the packed
+    overflow bucket) or -1 — are padding under both backends: no NaN
+    fill rows from the gather, identical outputs."""
+    x, _, _, scale = _stream(n=8, e=12, f=3, pad_every=0)
+    src = jnp.asarray([7, 0, 9, -1, 3, 8, 1, 2, 50, 4, -1, 5], jnp.int32)
+    dst = jnp.asarray([0, 9, 1, 2, -1, 3, 8, 4, 5, 50, 6, 7], jnp.int32)
+    xla = np.asarray(A.gather_aggregate(
+        agg, x, src, dst, 8, scale=scale, backend="xla"))
+    pal = np.asarray(A.gather_aggregate(
+        agg, x, src, dst, 8, scale=scale, backend="pallas",
+        edge_block=4, node_block=4))
+    assert np.isfinite(xla).all()
+    np.testing.assert_allclose(pal, xla, atol=1e-5)
+    # only the fully in-range edges contribute
+    keep = (np.asarray(src) >= 0) & (np.asarray(src) < 8) \
+        & (np.asarray(dst) >= 0) & (np.asarray(dst) < 8)
+    want = np.asarray(A.gather_aggregate(
+        agg, x, jnp.asarray(np.where(keep, src, -1)), dst, 8,
+        scale=scale, backend="xla"))
+    np.testing.assert_allclose(xla, want, atol=1e-5)
+
+
+def test_gather_aggregate_pallas_var_falls_back_to_materialized():
+    """var/std are outside the fused family: the pallas backend routes
+    them through the materialized segment kernel with identical numerics."""
+    x, src, dst, _ = _stream()
+    got = np.asarray(A.gather_aggregate(
+        "var", x, src, dst, 37, backend="pallas", edge_block=16,
+        node_block=8))
+    want = np.asarray(A.gather_aggregate(
+        "var", x, src, dst, 37, backend="xla"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ------------------------------------------- conv-level fused parity ----
+@pytest.mark.parametrize("conv", C.CONV_TYPES)
+def test_fused_packed_matches_materialized(conv):
+    """apply_packed traced under the pallas backend (fused gather for
+    linear convs, segment kernel elsewhere) == the materialized XLA
+    trace, for every conv, on a batch holding an empty-edge graph and
+    all-padding tail edge blocks."""
+    cfg = _cfg(conv)
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+    _, jb = _packed_batch()
+    with A.backend_scope("xla"):
+        ref = np.asarray(jax.jit(
+            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
+    with A.backend_scope("pallas", 32, 16):
+        got = np.asarray(jax.jit(
+            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
+    assert float(np.max(np.abs(got - ref))) < 1e-4, conv
+
+
+@pytest.mark.parametrize("conv", ["gcn", "sage"])
+@pytest.mark.parametrize("dataflow", C.DATAFLOWS)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_dataflow_overrides_preserve_numerics(conv, dataflow, backend):
+    """Every (dataflow, backend) combination produces the same model
+    outputs: the reordering is exact for linear phi."""
+    base = _cfg(conv, "auto")
+    params = prm.materialize(G.model_plan(base), jax.random.key(1))
+    _, jb = _packed_batch()
+    with A.backend_scope("xla"):
+        ref = np.asarray(jax.jit(lambda p, b: G.apply_packed(
+            p, base, b))(params, jb))
+    cfg = dataclasses.replace(base, gnn_dataflow=dataflow)
+    with A.backend_scope(backend, 32, 16):
+        got = np.asarray(jax.jit(lambda p, b: G.apply_packed(
+            p, cfg, b))(params, jb))
+    assert float(np.max(np.abs(got - ref))) < 1e-4, (dataflow, backend)
+
+
+def test_fused_node_task_isolated_nodes():
+    """Node-level outputs (not just pooled graph outputs) agree on a
+    batch whose zero-edge graph makes whole node rows isolated."""
+    cfg = _cfg("gcn", task="node")
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(2))
+    _, jb = _packed_batch()
+    with A.backend_scope("xla"):
+        ref = np.asarray(jax.jit(
+            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
+    with A.backend_scope("pallas", 32, 16):
+        got = np.asarray(jax.jit(
+            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
+    assert float(np.max(np.abs(got - ref))) < 1e-4
+
+
+# --------------------------------------------------- dataflow planner ---
+def test_resolve_dataflow_auto_rule():
+    """auto == transform_first exactly when out_dim < in_dim (GCN/SAGE);
+    GIN/PNA never reorder; explicit overrides win."""
+    for conv in C.REORDERABLE_CONVS:
+        assert C.resolve_dataflow(
+            C.ConvConfig(16, 8, conv=conv)) == "transform_first"
+        assert C.resolve_dataflow(
+            C.ConvConfig(8, 16, conv=conv)) == "aggregate_first"
+        assert C.resolve_dataflow(
+            C.ConvConfig(16, 16, conv=conv)) == "aggregate_first"
+        assert C.resolve_dataflow(C.ConvConfig(
+            16, 8, conv=conv, dataflow="aggregate_first")) \
+            == "aggregate_first"
+        assert C.resolve_dataflow(C.ConvConfig(
+            8, 16, conv=conv, dataflow="transform_first")) \
+            == "transform_first"
+    for conv in ("gin", "pna"):
+        assert C.resolve_dataflow(C.ConvConfig(
+            16, 8, conv=conv, dataflow="transform_first")) \
+            == "aggregate_first"
+    with pytest.raises(ValueError):
+        C.resolve_dataflow(C.ConvConfig(8, 8, dataflow="bogus"))
+
+
+def test_dataflow_cost_model():
+    """The closed-form cost prices the edge stream at aggregation width:
+    degree scales the gap, the sign follows out_dim - in_dim."""
+    c = C.dataflow_cost(64, 16, 2.0)
+    assert c["transform_first"] < c["aggregate_first"]
+    c = C.dataflow_cost(16, 64, 2.0)
+    assert c["aggregate_first"] < c["transform_first"]
+    gap4 = C.dataflow_cost(64, 16, 4.0)
+    gap2 = C.dataflow_cost(64, 16, 2.0)
+    assert (gap4["aggregate_first"] - gap4["transform_first"]) \
+        > (gap2["aggregate_first"] - gap2["transform_first"])
+
+
+def test_dataflow_in_dse_and_perf_features():
+    """The dataflow axis is sampled, reaches the model config, and is
+    featurized; old databases without the key still featurize with the
+    auto default."""
+    from repro.core import dse
+    from repro.core import perf_model as PM
+    rng = np.random.default_rng(0)
+    ds = [dse.sample_design(rng) for _ in range(32)]
+    assert all(d["dataflow"] in dse.SPACE["dataflow"] for d in ds)
+    assert len({d["dataflow"] for d in ds}) > 1
+    d = ds[0]
+    assert dse.design_to_config(d).gnn_dataflow == d["dataflow"]
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    i_tf = PM.FEATURE_NAMES.index("dataflow_transform_first")
+    i_af = PM.FEATURE_NAMES.index("dataflow_aggregate_first")
+    assert v[i_tf] == float(d["dataflow"] == "transform_first")
+    assert v[i_af] == float(d["dataflow"] == "aggregate_first")
+    # pre-dataflow database record: defaults preserved
+    legacy = dict(d)
+    legacy.pop("dataflow")
+    w = PM.features(legacy)
+    assert len(w) == len(PM.FEATURE_NAMES)
+    assert w[i_tf] == 0.0 and w[i_af] == 0.0
+    # the resolved width prices the reordering
+    i_width = PM.FEATURE_NAMES.index("agg_width_last")
+    wide = dict(d, conv="gcn", dataflow="auto", gnn_layers=2,
+                gnn_hidden_dim=256, gnn_out_dim=64)
+    narrow = dict(wide, dataflow="aggregate_first")
+    assert PM.features(wide)[i_width] == 64.0
+    assert PM.features(narrow)[i_width] == 256.0
+
+
+def test_gcn_scales_precomputed_and_consistent():
+    """graph_inputs/packed_inputs carry the hoisted GCN norm scales, and
+    gcn_apply produces identical outputs whether or not they are present
+    (direct callers without the precompute still work)."""
+    gs, jb = _packed_batch()
+    g, x, _, _ = G.packed_inputs(jb)
+    assert "gcn_edge_scale" in g and "gcn_self_scale" in g
+    valid = np.asarray(g["valid_e"])
+    es = np.asarray(g["gcn_edge_scale"])
+    assert np.all(es[~valid] == 0.0)
+    cfg = C.ConvConfig(in_dim=11, out_dim=8, conv="gcn")
+    params = prm.materialize(C.conv_plan(cfg), jax.random.key(3))
+    out = np.asarray(C.conv_apply(params, g, x, cfg))
+    bare = {k: v for k, v in g.items()
+            if k not in ("gcn_edge_scale", "gcn_self_scale")}
+    out2 = np.asarray(C.conv_apply(params, bare, x, cfg))
+    np.testing.assert_allclose(out, out2, atol=1e-6)
+
+
+# ------------------------------------------------- serve-path fallback --
+def test_drain_gnn_queue_oversize_fallback():
+    """Graphs too large for the packed budgets are answered through the
+    padded per-graph oracle (not dropped), and stats report the split."""
+    from repro.launch.serve import drain_gnn_queue
+    cfg = _cfg("gcn")
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(4))
+    big = P.GraphDataConfig(avg_nodes=40, max_nodes=64, max_edges=64,
+                            node_feat_dim=11, edge_feat_dim=4, seed=6)
+    queue = [P.make_graph(DS, i) for i in range(6)] \
+        + [P.make_graph(big, 0)]
+    node_budget, edge_budget = 32, 96     # the big graph cannot fit
+    assert not P.graph_fits_budget(queue[-1], node_budget, edge_budget)
+    fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    fallback = jax.jit(lambda p, el: G.apply(p, cfg, el))
+    outs, stats = drain_gnn_queue(fn, params, queue, node_budget,
+                                  edge_budget, 8, fallback)
+    assert stats["fallback_served"] == 1
+    assert stats["dropped"] == 0
+    assert stats["served"] == len(queue)
+    assert stats["served"] == stats["packed_served"] \
+        + stats["fallback_served"]
+    # the fallback answer equals the padded oracle run directly
+    el = {"node_feat": jnp.asarray(queue[-1].node_feat),
+          "edge_index": jnp.asarray(queue[-1].edge_index),
+          "edge_feat": jnp.asarray(queue[-1].edge_feat),
+          "num_nodes": jnp.int32(queue[-1].num_nodes)}
+    want = np.asarray(fallback(params, el))
+    np.testing.assert_allclose(np.asarray(outs[-1]), want, atol=1e-6)
+    # without a fallback_fn the oversize graph is dropped, as before
+    _, stats2 = drain_gnn_queue(fn, params, queue, node_budget,
+                                edge_budget, 8)
+    assert stats2["dropped"] == 1 and stats2["fallback_served"] == 0
