@@ -24,6 +24,16 @@ touches HBM — the paper's streamed gather->phi->aggregate pipeline;
 under ``backend="xla"`` it materializes the messages with ``jnp.take``
 and segment-reduces them (the safe pjit path, and the parity oracle).
 
+Both entry points are *precision-polymorphic* (``precision=`` takes a
+``quantization.LayerPrecision``): the node table / message tensor is
+stored and streamed at the layer's compute width — bf16 tiles, or true
+int8 tiles on the Pallas path (the per-tensor dequantization scale folds
+into the kernels' existing per-edge scale path / finalize) — while
+accumulation always runs in fp32 (exact int32-style sums for int8). The
+XLA path mirrors the same numerics with fake-quant fp32 values, so the
+two backends stay within fp32 tolerance of each other at every
+precision (docs/KERNELS.md has the tolerance table).
+
 Supported: sum, mean, min, max, var, std (matching the paper);
 ``gather_aggregate`` covers the sum/mean/min/max family that linear-phi
 convs (GCN/SAGE/GIN) lower to.
@@ -168,12 +178,20 @@ def aggregate_stream(agg: str, xs, mask=None):
     return finalize(agg, state)
 
 
+def _active_precision(precision):
+    """None for the fp32 fast path, the LayerPrecision otherwise."""
+    if precision is None or precision.compute == "fp32":
+        return None
+    return precision
+
+
 # --------------------------------------------------------- segment form --
 def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
                       valid=None, *, backend: str | None = None,
                       edge_block: int | None = None,
                       node_block: int | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool | None = None,
+                      precision=None):
     """messages: (E, dim) -> (num_segments, dim). seg_ids: (E,) int32;
     padded edges carry seg_ids == num_segments (dropped).
 
@@ -181,18 +199,39 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
     "pallas" routes through the fused edge-block kernel with the given
     tile sizes (DSE knobs ``edge_block``/``node_block``), "xla" through
     jax.ops.segment_*. Both produce identical results to fp32 tolerance;
-    the Pallas path is forward-only (no custom VJP yet)."""
+    the Pallas path is forward-only (no custom VJP yet).
+
+    precision (a ``quantization.LayerPrecision``) sets the *storage*
+    width of the message tensor: bf16 tiles, or — on the Pallas path —
+    true int8 tiles quantized onto the layer's activation grid with the
+    per-tensor dequant scale applied on the fp32 accumulator output
+    (var scales by s^2, std by s, the linear family by s). The XLA path
+    runs the same grids as fake-quant fp32. Accumulation is fp32 at
+    every precision."""
     backend = backend or _DEFAULT_BACKEND
     if backend not in SEGMENT_BACKENDS:
         raise ValueError(backend)
+    lp = _active_precision(precision)
+    if lp is not None and lp.compute == "bf16":
+        messages = messages.astype(jnp.bfloat16)
     if backend == "pallas":
+        from repro.core import quantization as Q
         from repro.kernels.segment_aggregate.ops import (
             segment_aggregate as _pallas_segment_aggregate)
-        return _pallas_segment_aggregate(
+        dequant = None
+        if lp is not None and lp.compute == "int8":
+            messages = Q.quantize_int8(messages, lp.act_fpx)
+            s = lp.act_fpx.resolution
+            dequant = s * s if agg == "var" else s
+        out = _pallas_segment_aggregate(
             messages, seg_ids, valid, num_segments=num_segments, agg=agg,
             edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
             node_block=node_block or _DEFAULT_NODE_BLOCK,
             interpret=_resolve_interpret(interpret))
+        return out if dequant is None else out * dequant
+    if lp is not None and lp.compute == "int8":
+        from repro.core import quantization as Q
+        messages = Q.quantize(messages, lp.act_fpx)   # fake-quant mirror
     if valid is not None:
         seg_ids = jnp.where(valid, seg_ids, num_segments)
     m = messages.astype(jnp.float32)
@@ -233,7 +272,8 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
                      scale=None, *, backend: str | None = None,
                      edge_block: int | None = None,
                      node_block: int | None = None,
-                     interpret: bool | None = None):
+                     interpret: bool | None = None,
+                     precision=None):
     """Fused gather -> phi -> aggregate over packed COO id streams.
 
     x: (N, F) node features; src/dst: (E,) int32 endpoint ids (padding:
@@ -246,22 +286,43 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
     tensor is never materialized; var/std fall back to the materialized
     gather + the Pallas segment kernel. "xla" always materializes
     ``jnp.take(x, src)`` and segment-reduces it — the materialized
-    baseline the fused kernel is numerics-pinned against."""
+    baseline the fused kernel is numerics-pinned against.
+
+    precision (a ``quantization.LayerPrecision``) sets the storage width
+    of the node table: bf16 tiles, or — on the fused Pallas path — true
+    int8 tiles whose per-tensor dequant scale is *folded into the
+    existing per-edge scale stream* (phi costs nothing extra; the fold is
+    exact for the whole sum/mean/min/max family since the scale is a
+    positive per-tensor constant). The XLA path mirrors the same grid as
+    fake-quant fp32; accumulation is fp32 everywhere."""
     backend = backend or _DEFAULT_BACKEND
     if backend not in SEGMENT_BACKENDS:
         raise ValueError(backend)
+    lp = _active_precision(precision)
+    if lp is not None and lp.compute == "bf16":
+        x = x.astype(jnp.bfloat16)
     if backend == "pallas" and agg in GATHER_AGGREGATIONS:
         from repro.kernels.fused_gather_aggregate.ops import (
             fused_gather_aggregate as _pallas_gather_aggregate)
+        if lp is not None and lp.compute == "int8":
+            from repro.core import quantization as Q
+            s = lp.act_fpx.resolution
+            x = Q.quantize_int8(x, lp.act_fpx)
+            scale = jnp.full(jnp.asarray(src).shape, s, jnp.float32) \
+                if scale is None else scale.astype(jnp.float32) * s
         return _pallas_gather_aggregate(
             x, src, dst, valid, scale, num_segments=num_segments, agg=agg,
             edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
             node_block=node_block or _DEFAULT_NODE_BLOCK,
             interpret=_resolve_interpret(interpret))
+    if lp is not None and lp.compute == "int8":
+        from repro.core import quantization as Q
+        x = Q.quantize(x, lp.act_fpx)                 # fake-quant mirror
     # materialized path: gather the (E, F) message tensor, then reduce.
     # Out-of-range ids on *either* stream are padding (same contract as
     # the fused kernel): clamp before the take so no fill-value NaNs can
-    # leak, and drop the edge via the validity mask.
+    # leak, and drop the edge via the validity mask. The gathered
+    # messages keep x's storage dtype until the scale/accumulate stage.
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
     msg = jnp.take(x, jnp.clip(src, 0, x.shape[0] - 1), axis=0)
@@ -271,9 +332,16 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
         & (dst >= 0) & (dst < num_segments)
     if valid is not None:
         ok = ok & valid
+    # the fused family quantizes the *table* (above) so the pallas and
+    # XLA traces see identical messages; the non-fused aggregations
+    # (var/std) share this materialized path on both backends, so the
+    # precision forwards to the segment stage and the message tensor
+    # itself streams at storage width through the segment kernel
+    inner_lp = lp if agg not in GATHER_AGGREGATIONS else None
     return segment_aggregate(agg, msg, dst, num_segments, ok,
                              backend=backend, edge_block=edge_block,
-                             node_block=node_block, interpret=interpret)
+                             node_block=node_block, interpret=interpret,
+                             precision=inner_lp)
 
 
 def segment_counts(seg_ids, num_segments: int, valid=None):

@@ -25,6 +25,16 @@ survey). ``resolve_dataflow`` picks the cheaper order from a closed-form
 cost model over (in_dim, out_dim, avg_degree); ``dataflow="auto"`` can be
 overridden per layer stack via ``ConvConfig.dataflow`` /
 ``GNNModelConfig.gnn_dataflow`` / ``Project(dataflow=...)``.
+
+Every conv also carries a per-layer precision (``ConvConfig.precision``,
+a ``quantization.LayerPrecision`` resolved by the model-level
+``PrecisionPolicy``): the tensor entering the edge stream is stored and
+streamed at the layer's compute width (bf16 / int8 tiles through the
+precision-polymorphic aggregation dispatch), while accumulation — and
+the model's residual stream — stay fp32. The byte width also enters the
+dataflow cost model: the edge-stream term of ``dataflow_cost`` scales
+with bytes-per-value, so low-precision layers shrink exactly the term
+the reordering optimizes.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregations as agg_mod
+from repro.core.quantization import LayerPrecision
 from repro.nn.layers import act, linear, linear_plan
 from repro.nn.param import ParamSpec
 
@@ -62,18 +73,27 @@ class ConvConfig:
     # transform/aggregate ordering for linear convs (resolve_dataflow)
     dataflow: str = "auto"
     avg_degree: float = 2.0   # dataset statistic driving the cost model
+    # per-layer datapath precision (PrecisionPolicy.layer(i)); the
+    # default is the fp32 identity
+    precision: LayerPrecision = LayerPrecision()
 
 
-def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float) -> dict:
-    """Per-node cost (fp32 words moved through the edge pipeline + MACs/F)
-    of each ordering. The W matmul costs ``in_dim * out_dim`` MACs per
-    node either way; the edge stream carries ``avg_degree`` messages per
-    node at the aggregation width — F_in when aggregating first, F_out
-    when transforming first. The degree scales how much the reordering
-    matters; the sign of the difference is ``out_dim - in_dim``."""
+def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
+                  msg_bytes: float = 4.0) -> dict:
+    """Per-node cost (fp32-word-equivalents moved through the edge
+    pipeline + MACs/F) of each ordering. The W matmul costs
+    ``in_dim * out_dim`` MACs per node either way; the edge stream
+    carries ``avg_degree`` messages per node at the aggregation width —
+    F_in when aggregating first, F_out when transforming first — and at
+    the layer's storage width: ``msg_bytes`` (the PrecisionPolicy byte
+    width, 4 = fp32) scales the streaming term, so low-precision layers
+    shrink exactly what the reordering optimizes. The degree scales how
+    much the reordering matters; the sign of the difference is
+    ``out_dim - in_dim``."""
     matmul = in_dim * out_dim
-    return {"aggregate_first": avg_degree * in_dim + matmul,
-            "transform_first": avg_degree * out_dim + matmul}
+    stream = avg_degree * (msg_bytes / 4.0)
+    return {"aggregate_first": stream * in_dim + matmul,
+            "transform_first": stream * out_dim + matmul}
 
 
 def resolve_dataflow(cfg: ConvConfig) -> str:
@@ -84,7 +104,8 @@ def resolve_dataflow(cfg: ConvConfig) -> str:
         return "aggregate_first"
     if cfg.dataflow != "auto":
         return cfg.dataflow
-    cost = dataflow_cost(cfg.in_dim, cfg.out_dim, cfg.avg_degree)
+    cost = dataflow_cost(cfg.in_dim, cfg.out_dim, cfg.avg_degree,
+                         cfg.precision.bytes_per_value)
     return "transform_first" \
         if cost["transform_first"] < cost["aggregate_first"] \
         else "aggregate_first"
@@ -139,12 +160,12 @@ def gcn_apply(params, g, x, cfg: ConvConfig):
     src, dst = edge_endpoints(g)
     n = x.shape[0]
     edge_scale, self_scale = _gcn_scales(g)
-    h = x if resolve_dataflow(cfg) == "aggregate_first" \
-        else x @ params["w"]["w"]                 # transform at min width
+    agg_first = resolve_dataflow(cfg) == "aggregate_first"
+    h = x if agg_first else x @ params["w"]["w"]  # transform at min width
     aggr = agg_mod.gather_aggregate("sum", h, src, dst, n, g["valid_e"],
-                                    edge_scale)
+                                    edge_scale, precision=cfg.precision)
     aggr = aggr + h.astype(jnp.float32) * self_scale[:, None]  # self loop
-    if h is x:
+    if agg_first:
         return linear(params["w"], aggr.astype(x.dtype))       # gamma
     return aggr.astype(x.dtype) + params["w"]["b"]
 
@@ -165,11 +186,11 @@ def sage_apply(params, g, x, cfg: ConvConfig):
     mean is linear, so W2 mean(x_u) == mean(W2 x_u) exactly —
     ``resolve_dataflow`` aggregates at min(F_in, F_out) width."""
     src, dst = edge_endpoints(g)
-    h = x if resolve_dataflow(cfg) == "aggregate_first" \
-        else x @ params["w_neigh"]["w"]
+    agg_first = resolve_dataflow(cfg) == "aggregate_first"
+    h = x if agg_first else x @ params["w_neigh"]["w"]
     aggr = agg_mod.gather_aggregate("mean", h, src, dst, x.shape[0],
-                                    g["valid_e"])
-    neigh = linear(params["w_neigh"], aggr.astype(x.dtype)) if h is x \
+                                    g["valid_e"], precision=cfg.precision)
+    neigh = linear(params["w_neigh"], aggr.astype(x.dtype)) if agg_first \
         else aggr.astype(x.dtype)
     return linear(params["w_self"], x) + neigh
 
@@ -199,10 +220,12 @@ def gin_apply(params, g, x, cfg: ConvConfig):
         msg = jax.nn.relu(_gather(x, src)
                           + linear(params["w_edge"], g["edge_feat"]))
         aggr = agg_mod.segment_aggregate("sum", msg, dst, x.shape[0],
-                                         g["valid_e"])
+                                         g["valid_e"],
+                                         precision=cfg.precision)
     else:
         aggr = agg_mod.gather_aggregate("sum", x, src, dst, x.shape[0],
-                                        g["valid_e"])
+                                        g["valid_e"],
+                                        precision=cfg.precision)
     h = (1.0 + params["eps"]) * x + aggr.astype(x.dtype)
     h = act(cfg.activation)(linear(params["mlp1"], h))
     return linear(params["mlp2"], h)
@@ -234,7 +257,8 @@ def pna_apply(params, g, x, cfg: ConvConfig):
         feats.append(g["edge_feat"].astype(x.dtype))
     msg = act(cfg.activation)(
         linear(params["pre"], jnp.concatenate(feats, axis=-1)))
-    towers = [agg_mod.segment_aggregate(a, msg, dst, n, g["valid_e"])
+    towers = [agg_mod.segment_aggregate(a, msg, dst, n, g["valid_e"],
+                                        precision=cfg.precision)
               for a in PNA_AGGS]
     deg = jnp.maximum(g["in_deg"], 1.0)
     logd = jnp.log(deg + 1.0)[:, None]

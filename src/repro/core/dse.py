@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import gnn_model as G
 from repro.core import perf_model as PM
+from repro.core import quantization as Q
 from repro.core.project import Project, TPUTarget
 from repro.data.pipeline import GraphDataConfig, size_budget
 
@@ -51,6 +52,11 @@ SPACE = {
     # (convs.resolve_dataflow): "auto" defers to the closed-form cost
     # model, the explicit values pin one ordering for the whole stack
     "dataflow": ["auto", "aggregate_first", "transform_first"],
+    # datapath precision (quantization.PRECISIONS): the per-model knob of
+    # the PrecisionPolicy subsystem — storage/streaming width of the conv
+    # datapath, priced by the fitted models through the byte-width
+    # features (perf_model precision_* / compute_bytes)
+    "precision": list(Q.PRECISIONS),
 }
 
 
@@ -67,7 +73,7 @@ def sample_design(rng, *, in_dim: int = 9, edge_dim: int = 3,
     d = {k: v[rng.integers(0, len(v))] for k, v in SPACE.items()}
     d.update(in_dim=in_dim, edge_dim=edge_dim, avg_nodes=avg_nodes,
              avg_edges=avg_edges, avg_degree=avg_degree, out_dim=out_dim,
-             fpx_bits=32)
+             fpx_bits=8 * Q.BYTE_WIDTHS[d["precision"]])
     d["node_budget"] = size_budget(d["batch_graphs"], avg_nodes)
     d["edge_budget"] = size_budget(d["batch_graphs"], avg_edges)
     return d
@@ -102,7 +108,8 @@ def design_to_config(d: dict) -> G.GNNModelConfig:
         gnn_p_out=d["gnn_p_out"],
         pna_delta=float(np.log(d["avg_degree"] + 1.0)),
         gnn_dataflow=d.get("dataflow", "auto"),
-        avg_degree=float(d["avg_degree"]))
+        avg_degree=float(d["avg_degree"]),
+        gnn_precision=d.get("precision", "fp32"))
 
 
 def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,

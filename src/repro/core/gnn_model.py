@@ -9,6 +9,15 @@ which map to kernel tile sizes on TPU.
 The paper's Listing-1 API shape is preserved: a single config object the
 user trains against (here: init/apply over padded graphs), handed to
 ``core.project.Project`` for accelerator generation.
+
+Precision: ``gnn_precision`` names the model's PrecisionPolicy (fp32 |
+bf16 | int8; ``apply``/``apply_packed`` also accept a fully resolved —
+possibly calibrated — ``PrecisionPolicy`` via ``policy=``). Each layer
+runs its datapath (weights, streamed activations, kernel tiles) at the
+layer's compute width while the residual stream, skip connections, and
+pooling stay fp32 — the standard master-precision mixed-precision
+discipline. The legacy ``quant`` hook (uniform FPX fake-quant after
+every op) is kept as the paper's original testbench semantic.
 """
 from __future__ import annotations
 
@@ -59,6 +68,10 @@ class GNNModelConfig:
     # force one ordering for the whole stack
     gnn_dataflow: str = "auto"
     avg_degree: float = 2.0
+    # datapath precision spec (quantization.PRECISIONS); resolved to a
+    # per-layer PrecisionPolicy by apply/apply_packed (or overridden by
+    # their policy= argument with a calibrated policy)
+    gnn_precision: str = "fp32"
 
     def conv_cfg(self, layer: int) -> C.ConvConfig:
         ind = self.graph_input_feature_dim if layer == 0 \
@@ -89,15 +102,33 @@ def mlp_head_plan(cfg: MLPConfig, dtype=jnp.float32):
             for i in range(len(dims) - 1)}
 
 
-def mlp_head_apply(params, x, cfg: MLPConfig, quant: Q.FPX | None = None):
+def mlp_head_apply(params, x, cfg: MLPConfig, quant: Q.FPX | None = None,
+                   lp: Q.LayerPrecision | None = None,
+                   record: list | None = None):
+    """lp (the policy's head precision) runs the head matmuls at the
+    compute width — bf16 casts; int8 re-quantizes the *hidden*
+    activations onto the head grid after each linear (the fake-quant
+    emulation of an int8 MAC array), while the final accumulator output
+    leaves the head dequantized in fp32 — and returns fp32.
+
+    record: when a list, appends each hidden layer's pre-activation
+    max-abs — the calibration probe for the head's act grid, kept
+    inside the real head path so it can never desynchronize from it."""
+    if lp is not None and lp.compute != "fp32":
+        params = lp.cast_params(params)
+        x = lp.cast_activation(x)
     n = cfg.hidden_layers + 1
     for i in range(n):
         x = linear(params[f"l{i}"], x)
         if quant is not None:
             x = Q.quantize(x, quant)
         if i < n - 1:
+            if record is not None:
+                record.append(jnp.max(jnp.abs(x)))
+            if lp is not None and lp.compute == "int8":
+                x = Q.quantize(x, lp.act_fpx)
             x = act(cfg.activation)(x)
-    return x
+    return x.astype(jnp.float32)
 
 
 def model_plan(cfg: GNNModelConfig, dtype=jnp.float32):
@@ -164,13 +195,41 @@ def packed_inputs(batch: dict) -> tuple:
     return g, x, node_mask, graph_id
 
 
+def resolve_policy(cfg: GNNModelConfig,
+                   policy=None) -> Q.PrecisionPolicy:
+    """The model's resolved PrecisionPolicy: an explicit (possibly
+    calibrated) policy wins, else ``cfg.gnn_precision`` resolves to a
+    uniform per-layer policy."""
+    return Q.resolve_policy(policy if policy is not None
+                            else cfg.gnn_precision, cfg.gnn_num_layers)
+
+
 def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
-              quant: Q.FPX | None):
+              quant: Q.FPX | None,
+              policy: Q.PrecisionPolicy | None = None,
+              record: list | None = None):
     """Conv stack + activation + skip, shared by the padded per-graph
-    oracle (`apply`) and the packed batch path (`apply_packed`)."""
+    oracle (`apply`) and the packed batch path (`apply_packed`).
+
+    policy: each layer's conv datapath (weights + the tensors entering
+    the edge stream) runs at the layer's compute width; the residual
+    stream / skip / activation stay fp32. record: when a list, appends
+    one max-abs scalar per layer (max over the layer's input and conv
+    output) — the calibration probe ``activation_ranges`` consumes.
+    """
     for i in range(cfg.gnn_num_layers):
         cc = cfg.conv_cfg(i)
-        h = C.conv_apply(params["convs"][f"c{i}"], g, x, cc)
+        p_i = params["convs"][f"c{i}"]
+        x_in = x
+        lp = policy.layer(i) if policy is not None else None
+        if lp is not None and lp.compute != "fp32":
+            cc = dataclasses.replace(cc, precision=lp)
+            p_i = lp.cast_params(p_i)
+            x_in = lp.cast_activation(x)
+        h = C.conv_apply(p_i, g, x_in, cc).astype(jnp.float32)
+        if record is not None:
+            record.append(jnp.maximum(jnp.max(jnp.abs(x)),
+                                      jnp.max(jnp.abs(h))))
         if quant is not None:
             h = Q.quantize(h, quant)
         if cfg.gnn_skip_connection:
@@ -186,39 +245,49 @@ def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
 
 
 def apply(params, cfg: GNNModelConfig, batch_el: dict,
-          quant: Q.FPX | None = None):
+          quant: Q.FPX | None = None, policy=None):
     """Forward one padded graph. quant != None reproduces the fixed-point
-    testbench semantics (weights are pre-quantized by the caller)."""
+    testbench semantics (weights are pre-quantized by the caller);
+    policy (or cfg.gnn_precision) selects the per-layer PrecisionPolicy
+    datapath."""
+    pol = resolve_policy(cfg, policy)
+    pol = None if pol.is_fp32 else pol
     g, x, node_mask = graph_inputs(batch_el)
     if quant is not None:
         x = Q.quantize(x, quant)
-    x = _backbone(params, cfg, g, x, node_mask, quant)
+    x = _backbone(params, cfg, g, x, node_mask, quant, pol)
     if cfg.task == "node":
         return x
     pooled = global_pooling(cfg.global_pooling, x, node_mask)
     if quant is not None:
         pooled = Q.quantize(pooled, quant)
     out = mlp_head_apply(params["mlp"], pooled.astype(x.dtype),
-                         cfg.mlp_head, quant)
+                         cfg.mlp_head, quant,
+                         pol.head if pol is not None else None)
     if cfg.output_activation:
         out = act(cfg.output_activation)(out)
     return out
 
 
 def apply_packed(params, cfg: GNNModelConfig, batch: dict,
-                 quant: Q.FPX | None = None):
+                 quant: Q.FPX | None = None, policy=None):
     """Forward a packed GraphBatch — all graphs in one XLA program.
 
     Returns (num_graphs, out_dim) for graph tasks (rows where
     ``graph_valid`` is False are padding) or the (N_total, F) node
     embeddings for node tasks. Matches per-graph ``apply`` outputs to
-    fp32 tolerance; `apply` stays the single-graph oracle.
+    fp32 tolerance; `apply` stays the single-graph oracle. policy (or
+    cfg.gnn_precision) selects the per-layer PrecisionPolicy datapath —
+    both paths resolve it identically, so padded-vs-packed parity holds
+    at every precision.
     """
+    pol = resolve_policy(cfg, policy)
+    pol = None if pol.is_fp32 else pol
     g, x, node_mask, graph_id = packed_inputs(batch)
     num_graphs = batch["graph_valid"].shape[0]
     if quant is not None:
         x = Q.quantize(x, quant)
-    x = _backbone(params, cfg, g, x, node_mask, quant)
+    x = _backbone(params, cfg, g, x, node_mask, quant, pol)
     if cfg.task == "node":
         return x
     pooled = segment_global_pooling(cfg.global_pooling, x, graph_id,
@@ -226,10 +295,65 @@ def apply_packed(params, cfg: GNNModelConfig, batch: dict,
     if quant is not None:
         pooled = Q.quantize(pooled, quant)
     out = mlp_head_apply(params["mlp"], pooled.astype(x.dtype),
-                         cfg.mlp_head, quant)
+                         cfg.mlp_head, quant,
+                         pol.head if pol is not None else None)
     if cfg.output_activation:
         out = act(cfg.output_activation)(out)
     return out
+
+
+def activation_ranges(params, cfg: GNNModelConfig, batch: dict) -> dict:
+    """Calibration probe: one fp32 forward over a packed calibration
+    batch, recording the max-abs ranges an int8 policy's grids are
+    fitted from (``quantization.calibrate_policy``):
+
+      acts[i]      — layer i's streamed tensors (conv input + output)
+      weights[i]   — layer i's conv weight leaves
+      head         — the pooled head input (graph tasks; 0.0 for node)
+      head_hidden  — the head's hidden activations (a separate
+                     per-tensor scale: add-pooling makes the input range
+                     dwarf the hidden range)
+      head_weight  — the MLP-head weight leaves
+    """
+    def tree_max_abs(tree):
+        leaves = [jnp.max(jnp.abs(a)) for a in jax.tree_util.tree_leaves(
+            tree) if jnp.issubdtype(a.dtype, jnp.floating)]
+        return float(jnp.max(jnp.stack(leaves))) if leaves else 0.0
+
+    g, x, node_mask, graph_id = packed_inputs(batch)
+    rec: list = []
+    x = _backbone(params, cfg, g, x, node_mask, None, None, record=rec)
+    head_range = head_hidden = 0.0
+    if cfg.task == "graph":
+        num_graphs = batch["graph_valid"].shape[0]
+        pooled = segment_global_pooling(cfg.global_pooling, x, graph_id,
+                                        num_graphs, node_mask)
+        head_range = float(jnp.max(jnp.abs(pooled)))
+        head_rec: list = []
+        mlp_head_apply(params["mlp"], pooled, cfg.mlp_head,
+                       record=head_rec)
+        if head_rec:
+            head_hidden = float(jnp.max(jnp.stack(head_rec)))
+    return {
+        "acts": [float(r) for r in rec],
+        "weights": [tree_max_abs(params["convs"][f"c{i}"])
+                    for i in range(cfg.gnn_num_layers)],
+        "head": head_range,
+        "head_hidden": head_hidden,
+        "head_weight": tree_max_abs(params.get("mlp", {})),
+    }
+
+
+def calibrated_policy(params, cfg: GNNModelConfig, batch: dict,
+                      policy=None) -> Q.PrecisionPolicy:
+    """Resolve + max-abs-calibrate the model's policy on one packed
+    calibration batch (no-op beyond resolution for fp32/bf16)."""
+    pol = resolve_policy(cfg, policy)
+    if not pol.needs_calibration:
+        return pol
+    r = activation_ranges(params, cfg, batch)
+    return Q.calibrate_policy(pol, r["acts"], r["weights"], r["head"],
+                              r["head_weight"], r["head_hidden"])
 
 
 def apply_batch(params, cfg: GNNModelConfig, batch: dict,

@@ -13,6 +13,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.convs import CONV_TYPES, ConvConfig, resolve_dataflow
+from repro.core.quantization import BYTE_WIDTHS
 
 
 # -------------------------------------------------------- decision tree --
@@ -172,6 +173,10 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     # final conv layer, so the forests price the edge-bandwidth cut
     "dataflow_aggregate_first", "dataflow_transform_first",
     "agg_width_last",
+    # PrecisionPolicy axis: compute-dtype one-hot (fp32 = both zero) and
+    # the storage bytes per value, so the forests price the bandwidth
+    # cut of low-precision node/message tiles
+    "precision_bf16", "precision_int8", "compute_bytes",
 ]
 
 
@@ -191,8 +196,9 @@ def _resolved_agg_width(design: dict) -> float:
 
 def features(design: dict) -> np.ndarray:
     """Design-point dict (see dse.sample_design) -> feature vector.
-    Batch-budget fields default to the single-graph setting so databases
-    recorded before the packed-batch refactor still featurize."""
+    Batch-budget fields default to the single-graph setting and the
+    precision axis defaults to fp32 (4 B/value), so databases recorded
+    before the packed-batch / precision refactors still featurize."""
     onehot = [1.0 if design["conv"] == c else 0.0 for c in CONV_TYPES]
     return np.array(onehot + [
         design["gnn_hidden_dim"], design["gnn_out_dim"],
@@ -211,4 +217,7 @@ def features(design: dict) -> np.ndarray:
         1.0 if design.get("dataflow") == "aggregate_first" else 0.0,
         1.0 if design.get("dataflow") == "transform_first" else 0.0,
         _resolved_agg_width(design),
+        1.0 if design.get("precision", "fp32") == "bf16" else 0.0,
+        1.0 if design.get("precision", "fp32") == "int8" else 0.0,
+        float(BYTE_WIDTHS[design.get("precision", "fp32")]),
     ], dtype=float)

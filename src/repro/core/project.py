@@ -66,14 +66,23 @@ class Project:
                  node_budget: int | None = None,
                  edge_budget: int | None = None,
                  edge_block: int = 128, node_block: int = 128,
-                 agg_backend: str = "xla", dataflow: str | None = None):
+                 agg_backend: str = "xla", dataflow: str | None = None,
+                 precision=None):
         self.name = name
         # dataflow override + dataset degree flow into the per-layer
-        # transform/aggregate planner (convs.resolve_dataflow)
+        # transform/aggregate planner (convs.resolve_dataflow);
+        # precision (a name from quantization.PRECISIONS or a resolved
+        # PrecisionPolicy) selects the per-layer datapath width
         cfg_updates = {"avg_degree": float(degree_guess)}
         if dataflow is not None:
             cfg_updates["gnn_dataflow"] = dataflow
+        if isinstance(precision, str):
+            cfg_updates["gnn_precision"] = precision
         self.cfg = dataclasses.replace(model_cfg, **cfg_updates)
+        # resolved once per project; build_and_run_testbench max-abs
+        # calibrates int8 grids on the testbench graphs before running
+        self.policy = G.resolve_policy(
+            self.cfg, precision if not isinstance(precision, str) else None)
         self.task = task
         self.build_dir = build_dir
         self.dataset_cfg = dataset_cfg or data_mod.GraphDataConfig(
@@ -133,15 +142,19 @@ class Project:
                     return apply_fn(params, batch)
             return fn
 
+        policy = self.policy
         self._fn = jax.jit(with_backend(
-            lambda p, el: G.apply(p, cfg, el, quant)))
+            lambda p, el: G.apply(p, cfg, el, quant, policy)))
         self._fn_packed = jax.jit(with_backend(
-            lambda p, b: G.apply_packed(p, cfg, b, quant)))
+            lambda p, b: G.apply_packed(p, cfg, b, quant, policy)))
         with open(os.path.join(self.build_dir, "config.json"), "w") as f:
             json.dump({"name": self.name,
                        "model": dataclasses.asdict(cfg),
                        "quant": str(self.fpx),
                        "float_or_fixed": self.float_or_fixed,
+                       # the resolved (possibly calibrated) per-layer
+                       # precision policy this project's programs bake in
+                       "precision": policy.describe(),
                        "max_nodes": self.max_nodes,
                        "max_edges": self.max_edges,
                        "batch_graphs": self.batch_graphs,
@@ -189,7 +202,10 @@ class Project:
               for i in range(num_graphs)]
         if self.params is None:
             self.init_params()
-        ref_fn = jax.jit(lambda p, el: G.apply(p, self.cfg, el, None))
+        # the reference is always the full-precision program: pin an
+        # explicit fp32 policy so cfg.gnn_precision cannot leak into it
+        fp32 = Q.resolve_policy("fp32", self.cfg.gnn_num_layers)
+        ref_fn = jax.jit(lambda p, el: G.apply(p, self.cfg, el, None, fp32))
         refs = [np.asarray(ref_fn(self.params, self._graph_to_el(g)))
                 for g in ds]
         np.savez(os.path.join(self.build_dir, "testbench.npz"),
@@ -205,20 +221,44 @@ class Project:
                 "edge_feat": jnp.asarray(g.edge_feat),
                 "num_nodes": jnp.int32(g.num_nodes)}
 
+    def calibrate(self, num_graphs: int = 8):
+        """Max-abs-calibrate the project's int8 grids on a packed batch
+        of testbench graphs, then regenerate the jitted programs (and
+        config.json) with the calibrated policy. No-op for fp32/bf16."""
+        if not self.policy.needs_calibration:
+            return self.policy
+        if self.params is None:
+            self.init_params()
+        graphs = getattr(self, "_tb_graphs", None) \
+            or [data_mod.make_graph(self.dataset_cfg, i)
+                for i in range(num_graphs)]
+        batch, _ = data_mod.pack_graphs(
+            graphs[:num_graphs], self.node_budget, self.edge_budget,
+            self.batch_graphs)
+        self.policy = G.calibrated_policy(
+            self.params, self.cfg, self._packed_to_device(batch),
+            self.policy)
+        self.gen_hw_model()          # re-bake programs + config.json
+        return self.policy
+
     def build_and_run_testbench(self, packed: bool = True) -> dict:
         """Run the generated program on every testbench graph; report MAE
         vs the float reference and the measured mean runtime. With
         ``packed`` (default) the same graphs are also drained through the
         packed GraphBatch program, reporting throughput in graphs/s next
-        to the single-graph latency."""
-        if self._fn is None:
-            self.gen_hw_model()
+        to the single-graph latency. Quantized projects (int8 policy or
+        the legacy fixed path) also report quantization-error stats
+        (mean/max/SQNR-dB, ``quantization.quant_error_stats``)."""
         if self.params is None:
             self.init_params()
+        if self.policy.needs_calibration:
+            self.calibrate()
+        if self._fn is None:
+            self.gen_hw_model()
         params = self.params
         if self.float_or_fixed == "fixed":
             params = Q.quantize_tree(params, self.fpx)
-        maes, times = [], []
+        maes, times, outs = [], [], []
         out = None
         for g, ref in zip(self._tb_graphs, self._tb_refs):
             el = self._graph_to_el(g)
@@ -230,14 +270,44 @@ class Project:
             out = self._fn(params, el)
             jax.block_until_ready(out)
             times.append(time.perf_counter() - t0)
-            maes.append(float(np.mean(np.abs(np.asarray(out) - ref))))
+            outs.append(np.asarray(out))
+            maes.append(float(np.mean(np.abs(outs[-1] - ref))))
         tb = {"mae": float(np.mean(maes)),
               "mean_runtime_ms": float(np.mean(times) * 1e3),
               "p50_runtime_ms": float(np.median(times) * 1e3),
               "n_graphs": len(self._tb_graphs),
               "loop_graphs_per_s": 1.0 / max(float(np.mean(times)), 1e-12),
               "quant": str(self.fpx) if self.float_or_fixed == "fixed"
-              else "float32"}
+              else "float32",
+              "precision": self.policy.name}
+        # quant-error report next to the throughput numbers: output error
+        # vs the float references, plus the weight-grid error of the
+        # quantized formats (quant_error_stats reduces; callers don't)
+        if not self.policy.is_fp32 or self.float_or_fixed == "fixed":
+            tb["quant_error"] = {"output": Q.error_stats(
+                np.stack(outs), np.stack(self._tb_refs))}
+            if self.float_or_fixed == "fixed":
+                leaves = np.concatenate(
+                    [np.asarray(a).ravel() for a in
+                     jax.tree_util.tree_leaves(self.params)])
+                tb["quant_error"]["weights"] = Q.quant_error_stats(
+                    leaves, self.fpx)
+            elif any(lp.compute == "int8" for lp in self.policy.layers) \
+                    or self.policy.head.compute == "int8":
+                # the exact weight tensors the datapath quantizes, each
+                # against its own calibrated grid: per-layer conv weights
+                # + the head (skip projections stay fp32 in _backbone)
+                orig = {f"c{i}": self.params["convs"][f"c{i}"]
+                        for i in range(self.cfg.gnn_num_layers)}
+                orig["mlp"] = self.params.get("mlp", {})
+                cast = {f"c{i}": self.policy.layer(i).cast_params(
+                    self.params["convs"][f"c{i}"])
+                    for i in range(self.cfg.gnn_num_layers)}
+                cast["mlp"] = self.policy.head.cast_params(orig["mlp"])
+                flat = [np.concatenate(
+                    [np.asarray(a).ravel() for a in
+                     jax.tree_util.tree_leaves(t)]) for t in (cast, orig)]
+                tb["quant_error"]["weights"] = Q.error_stats(*flat)
         if packed:
             tb["packed"] = self._run_packed_testbench(params)
         with open(os.path.join(self.build_dir, "tb_data.json"), "w") as f:
@@ -322,10 +392,16 @@ class Project:
         p_eff = min(max(self.cfg.gnn_p_hidden * self.cfg.gnn_p_out, 1),
                     128) / 128
         eff_peak = self.target.peak_flops * p_eff
-        # data-width scaling: <16,10> weights/activations move half the
-        # bytes of <32,16> (cost_analysis sees the f32 emulation).
-        width_scale = (self.fpx.w / 32.0) if self.float_or_fixed == "fixed" \
-            else 1.0
+        # data-width scaling: cost_analysis sees the f32/fake-quant
+        # emulation, so the modeled bytes shrink with the storage width —
+        # the PrecisionPolicy byte width (bf16 = 2 B, int8 = 1 B), or the
+        # legacy fixed-point width (<16,10> moves half of <32,16>).
+        if not self.policy.is_fp32:
+            width_scale = self.policy.compute_bytes / 4.0
+        elif self.float_or_fixed == "fixed":
+            width_scale = self.fpx.w / 32.0
+        else:
+            width_scale = 1.0
         bytes_eff = bytes_ * width_scale
         latency = max(flops / eff_peak, bytes_eff / self.target.hbm_bw)
         # packed-batch program: same model compiled over the GraphBatch
@@ -354,6 +430,8 @@ class Project:
             + agg_overhead_s
         packed = {
             "latency_s": latency_p,
+            "precision": self.policy.name,
+            "compute_bytes": self.policy.compute_bytes,
             "agg_grid_steps": grid_steps,
             "agg_overhead_s": agg_overhead_s,
             "edge_block": self.edge_block,
@@ -379,6 +457,7 @@ class Project:
             "fits_hbm": (temp + args) < self.target.hbm_bytes,
             "compile_s": compile_s,
             "target": self.target.name,
+            "precision": self.policy.name,
         }
         self._compiled = compiled
         if save_hlo:

@@ -1,14 +1,31 @@
-"""Fixed-point quantization emulation (paper's FPX(W, I) = ap_fixed<W,I>).
+"""Fixed-point quantization + the per-layer PrecisionPolicy subsystem.
 
-``FPX(32, 16)`` means 32 total bits with 16 integer bits (signed), i.e.
-16 fractional bits: values quantize to round(x * 2^F) / 2^F clipped to
-[-2^(I-1), 2^(I-1) - 2^-F]. The testbench casts weights + activations
-through this grid to reproduce the paper's "true quantization simulation";
-a per-layer hook inserts activation quantization after every conv/linear.
+Two layers of machinery live here:
+
+* **FPX** — the paper's ``ap_fixed<W,I>`` grid emulation. ``FPX(32, 16)``
+  means 32 total bits with 16 integer bits (signed), i.e. 16 fractional
+  bits: values quantize to round(x * 2^F) / 2^F clipped to
+  [-2^(I-1), 2^(I-1) - 2^-F]. ``quantize`` is the fake-quant form (fp32
+  values on the grid); ``quantize_int8`` / ``dequantize_int8`` are the
+  *real* integer representation of an 8-bit grid — for power-of-two
+  scales the two are exactly equivalent
+  (``dequantize_int8(quantize_int8(x, fpx), fpx) == quantize(x, fpx)``),
+  which is what lets the Pallas kernels move int8 tiles while the XLA
+  baseline runs on fake-quant fp32 with identical numerics.
+
+* **PrecisionPolicy** — the per-layer precision spec threaded end-to-end
+  (kernels -> convs -> gnn_model -> Project -> DSE -> serve). Each layer
+  carries a ``LayerPrecision`` with a compute dtype (fp32 | bf16 | int8),
+  an accumulator dtype (always fp32/int32 — low-precision *storage and
+  streaming*, full-precision accumulation), and the int8 grids for
+  activations/weights. ``resolve_policy`` builds the policy once per
+  model; ``calibrate_policy`` fits the int8 grids by max-abs on a
+  calibration batch (``gnn_model.activation_ranges``).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +35,19 @@ import jax.numpy as jnp
 class FPX:
     w: int = 32          # total bits
     i: int = 16          # integer bits (including sign)
+
+    def __post_init__(self):
+        # FPX(4, 8) would silently yield negative frac bits and a
+        # nonsense grid — reject malformed formats loudly instead.
+        if self.w <= 0:
+            raise ValueError(f"FPX total bits must be positive, got w="
+                             f"{self.w}")
+        if self.i < 1:
+            raise ValueError(f"FPX needs at least the sign bit as an "
+                             f"integer bit, got i={self.i}")
+        if self.i > self.w:
+            raise ValueError(f"FPX integer bits cannot exceed total bits: "
+                             f"i={self.i} > w={self.w}")
 
     @property
     def frac_bits(self) -> int:
@@ -39,11 +69,58 @@ class FPX:
         return f"fpx<{self.w},{self.i}>"
 
 
+def fpx_for_max_abs(max_abs: float, w: int = 8) -> FPX:
+    """Max-abs calibration: the narrowest ``FPX(w, i)`` grid whose range
+    covers ``max_abs`` (the scale-fitting rule of the int8 path). The
+    exact maximum may still clip by one resolution step — standard
+    symmetric-quantization behavior."""
+    if not math.isfinite(max_abs) or max_abs <= 0.0:
+        return FPX(w, 1)
+    i = int(math.ceil(math.log2(max_abs))) + 1
+    return FPX(w, min(max(i, 1), w))
+
+
+@jax.custom_jvp
+def _ste(xf, q):
+    """Straight-through estimator: forward the (bit-exact) grid value,
+    backward the identity tangent of the pre-quantization input."""
+    return q
+
+
+@_ste.defjvp
+def _ste_jvp(primals, tangents):
+    _, q = primals
+    dx, _ = tangents
+    return q, dx
+
+
 def quantize(x, fpx: FPX):
-    """Round-to-nearest onto the fixed-point grid, saturating."""
+    """Round-to-nearest onto the fixed-point grid, saturating (fake-quant:
+    fp32 values that lie exactly on the grid).
+
+    Differentiable via the straight-through estimator: the grid is
+    piecewise-constant (zero gradient almost everywhere), so training
+    through a fake-quant datapath — the legacy testbench hook or a
+    DSE-sampled int8 PrecisionPolicy — would otherwise silently receive
+    all-zero weight/activation gradients."""
+    xf = x.astype(jnp.float32)
     scale = 2.0 ** fpx.frac_bits
-    q = jnp.round(x.astype(jnp.float32) * scale) / scale
-    return jnp.clip(q, fpx.min_val, fpx.max_val)
+    q = jnp.clip(jnp.round(xf * scale) / scale, fpx.min_val, fpx.max_val)
+    return _ste(xf, q)
+
+
+def quantize_int8(x, fpx: FPX):
+    """Real integer representation of an 8-bit fixed-point grid:
+    ``q = clip(round(x / resolution))`` as int8. Exactly equivalent to
+    the fake-quant form: ``dequantize_int8(quantize_int8(x, fpx), fpx)
+    == quantize(x, fpx)`` (power-of-two scales are exact in fp32)."""
+    assert fpx.w == 8, f"int8 grid needs w=8, got {fpx}"
+    q = jnp.round(x.astype(jnp.float32) / fpx.resolution)
+    return jnp.clip(q, -128.0, 127.0).astype(jnp.int8)
+
+
+def dequantize_int8(q, fpx: FPX):
+    return q.astype(jnp.float32) * fpx.resolution
 
 
 def quantize_tree(tree, fpx: FPX):
@@ -54,3 +131,196 @@ def quantize_tree(tree, fpx: FPX):
 
 def quant_error(x, fpx: FPX):
     return jnp.abs(quantize(x, fpx) - x.astype(jnp.float32))
+
+
+def error_stats(x, ref) -> dict:
+    """Mean/max absolute error + SQNR in dB of ``x`` against ``ref``.
+    SQNR = 10 log10(signal power / error power); inf when exact."""
+    x = jnp.asarray(x, jnp.float32)
+    ref = jnp.asarray(ref, jnp.float32)
+    err = x - ref
+    sig_p = float(jnp.mean(jnp.square(ref)))
+    err_p = float(jnp.mean(jnp.square(err)))
+    sqnr = float("inf") if err_p == 0.0 \
+        else 10.0 * math.log10(max(sig_p, 1e-30) / err_p)
+    return {"mean_abs": float(jnp.mean(jnp.abs(err))),
+            "max_abs": float(jnp.max(jnp.abs(err))) if err.size else 0.0,
+            "sqnr_db": sqnr}
+
+
+def quant_error_stats(x, fpx: FPX) -> dict:
+    """Quantization-error summary of casting ``x`` through ``fpx``:
+    mean/max absolute error + SQNR-dB — the reduced form Project's
+    testbench reports (callers no longer re-reduce ``quant_error``)."""
+    return error_stats(quantize(jnp.asarray(x), fpx), x)
+
+
+# --------------------------------------------------- precision policy ----
+PRECISIONS = ("fp32", "bf16", "int8")
+COMPUTE_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16,
+                  "int8": jnp.int8}
+BYTE_WIDTHS = {"fp32": 4, "bf16": 2, "int8": 1}
+ACCUM_DTYPES = {"fp32": "fp32", "bf16": "fp32", "int8": "int32"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPrecision:
+    """Precision of one layer's datapath: values (node/message tiles,
+    weights) are stored and streamed at ``compute`` width; accumulation
+    always runs at full precision (``accum``: fp32 for the float
+    formats, int32-exact for int8 — integer sums are exactly
+    representable in the fp32 emulation up to 2^24)."""
+    compute: str = "fp32"              # fp32 | bf16 | int8
+    act_fpx: FPX = FPX(8, 3)           # int8: activation/message grid
+    weight_fpx: FPX = FPX(8, 2)        # int8: weight grid
+    # int8: separate per-tensor grid for the tensor *entering* the layer
+    # when its range differs from the internal activations (the MLP
+    # head's pooled input vs its hidden activations); None = act_fpx
+    in_fpx: FPX | None = None
+
+    def __post_init__(self):
+        if self.compute not in PRECISIONS:
+            raise ValueError(f"unknown compute dtype {self.compute!r}; "
+                             f"expected one of {PRECISIONS}")
+
+    @property
+    def accum(self) -> str:
+        return ACCUM_DTYPES[self.compute]
+
+    @property
+    def bytes_per_value(self) -> int:
+        return BYTE_WIDTHS[self.compute]
+
+    @property
+    def dtype(self):
+        return COMPUTE_DTYPES[self.compute]
+
+    def cast_activation(self, x):
+        """Activations entering this layer's datapath: bf16 really
+        casts; int8 fake-quants onto the input grid (the kernels'
+        dispatch converts to true int8 tiles); fp32 is identity."""
+        if self.compute == "bf16":
+            return x.astype(jnp.bfloat16)
+        if self.compute == "int8":
+            return quantize(x, self.in_fpx or self.act_fpx)
+        return x
+
+    def cast_params(self, tree):
+        """Weights of this layer: bf16 casts, int8 fake-quants onto the
+        weight grid (per-tensor scale), fp32 is identity."""
+        if self.compute == "bf16":
+            return jax.tree_util.tree_map(
+                lambda a: a.astype(jnp.bfloat16)
+                if jnp.issubdtype(a.dtype, jnp.floating) else a, tree)
+        if self.compute == "int8":
+            return quantize_tree(tree, self.weight_fpx)
+        return tree
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Per-layer precision spec, resolved once per model: one
+    ``LayerPrecision`` per conv layer plus one for the MLP head.
+    ``calibrated`` marks int8 grids fitted by max-abs calibration
+    (``calibrate_policy``) rather than the conservative defaults."""
+    name: str = "fp32"
+    layers: tuple = ()                 # LayerPrecision per conv layer
+    head: LayerPrecision = LayerPrecision()
+    calibrated: bool = False
+
+    def layer(self, i: int) -> LayerPrecision:
+        if not self.layers:
+            return self.head
+        return self.layers[min(i, len(self.layers) - 1)]
+
+    @property
+    def is_fp32(self) -> bool:
+        return all(lp.compute == "fp32" for lp in self.layers) \
+            and self.head.compute == "fp32"
+
+    @property
+    def needs_calibration(self) -> bool:
+        return (not self.calibrated) and (
+            any(lp.compute == "int8" for lp in self.layers)
+            or self.head.compute == "int8")
+
+    @property
+    def compute_bytes(self) -> float:
+        """Mean per-value byte width of the conv datapath — what the
+        byte-width-aware cost models consume."""
+        if not self.layers:
+            return float(self.head.bytes_per_value)
+        return float(sum(lp.bytes_per_value for lp in self.layers)
+                     / len(self.layers))
+
+    def describe(self) -> dict:
+        """JSON-serializable resolved form (Project's config.json)."""
+        def one(lp: LayerPrecision) -> dict:
+            d = {"compute": lp.compute, "accum": lp.accum,
+                 "bytes_per_value": lp.bytes_per_value}
+            if lp.compute == "int8":
+                d["act_fpx"] = str(lp.act_fpx)
+                d["weight_fpx"] = str(lp.weight_fpx)
+                if lp.in_fpx is not None:
+                    d["in_fpx"] = str(lp.in_fpx)
+            return d
+        return {"name": self.name, "calibrated": self.calibrated,
+                "compute_bytes": self.compute_bytes,
+                "layers": [one(lp) for lp in self.layers],
+                "head": one(self.head)}
+
+
+def resolve_policy(spec, num_layers: int) -> PrecisionPolicy:
+    """Resolve a precision spec into the per-layer policy: ``None`` or a
+    name from ``PRECISIONS`` applies one compute dtype uniformly; an
+    existing ``PrecisionPolicy`` passes through (padded/truncated to
+    ``num_layers`` if its layer count differs)."""
+    if isinstance(spec, PrecisionPolicy):
+        if len(spec.layers) == num_layers:
+            return spec
+        layers = tuple(spec.layer(i) for i in range(num_layers))
+        return dataclasses.replace(spec, layers=layers)
+    name = spec or "fp32"
+    if name not in PRECISIONS:
+        raise ValueError(f"unknown precision {name!r}; expected one of "
+                         f"{PRECISIONS} or a PrecisionPolicy")
+    lp = LayerPrecision(compute=name)
+    return PrecisionPolicy(name=name, layers=(lp,) * num_layers, head=lp)
+
+
+def calibrate_policy(policy: PrecisionPolicy, act_ranges,
+                     weight_ranges=None, head_range=None,
+                     head_weight_range=None,
+                     head_hidden_range=None) -> PrecisionPolicy:
+    """Fit the int8 grids from observed max-abs ranges (max-abs scale
+    fitting on a calibration batch — ``gnn_model.activation_ranges``
+    produces the inputs). fp32/bf16 layers pass through unchanged. The
+    head gets two per-tensor grids: ``head_range`` (the pooled input,
+    whose add-pooling magnitude dwarfs the rest) fits ``in_fpx`` and
+    ``head_hidden_range`` fits the hidden-activation ``act_fpx``."""
+    layers = []
+    for i, lp in enumerate(policy.layers):
+        if lp.compute != "int8":
+            layers.append(lp)
+            continue
+        new = lp
+        if act_ranges is not None and i < len(act_ranges):
+            new = dataclasses.replace(
+                new, act_fpx=fpx_for_max_abs(float(act_ranges[i])))
+        if weight_ranges is not None and i < len(weight_ranges):
+            new = dataclasses.replace(
+                new, weight_fpx=fpx_for_max_abs(float(weight_ranges[i])))
+        layers.append(new)
+    head = policy.head
+    if head.compute == "int8":
+        if head_range is not None:
+            head = dataclasses.replace(
+                head, in_fpx=fpx_for_max_abs(float(head_range)))
+        if head_hidden_range is not None:
+            head = dataclasses.replace(
+                head, act_fpx=fpx_for_max_abs(float(head_hidden_range)))
+        if head_weight_range is not None:
+            head = dataclasses.replace(
+                head, weight_fpx=fpx_for_max_abs(float(head_weight_range)))
+    return dataclasses.replace(policy, layers=tuple(layers), head=head,
+                               calibrated=True)

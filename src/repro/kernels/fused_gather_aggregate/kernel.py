@@ -27,6 +27,14 @@ against the node table yields the edge block's scaled messages without a
 serial gather loop; the scatter side reuses the segment kernel's
 destination one-hot matmul / fori-loop updates.
 
+The node table is dtype-polymorphic: fp32, bf16, or int8 tables stay
+resident in VMEM at their storage width — the PrecisionPolicy bandwidth
+lever for the gather stage — and the gather contraction + every
+accumulator run in fp32 (int8 values are integer-valued fp32, so the
+accumulation is exact int32-style). For int8 tables the per-tensor
+dequantization scale is folded into the per-edge ``scale`` stream by the
+caller (core.aggregations), so dequantization also costs nothing extra.
+
 Supported: sum, mean, min, max — the family GCN/SAGE/GIN lower to.
 var/std (PNA towers) and per-edge MLPs keep the materialized path.
 """
@@ -109,11 +117,14 @@ def fused_gather_aggregate_pallas(x, src, dst, num_segments: int, *,
                                   edge_block: int = 128,
                                   node_block: int = 128,
                                   interpret: bool = True):
-    """x: (N, F) node features; src/dst: (E,) int32 endpoint id streams
-    of the packed COO edge buffer (-1 or any out-of-range id = padding);
-    scale: optional (E,) per-edge message scale (phi), applied before
-    aggregation. Returns (num_segments, F) float32 aggregates; empty
-    segments zero-fill. The (E, F) message tensor is never materialized.
+    """x: (N, F) node features in fp32, bf16, or int8 (the table streams
+    and stays VMEM-resident at its storage width; accumulation is fp32);
+    src/dst: (E,) int32 endpoint id streams of the packed COO edge
+    buffer (-1 or any out-of-range id = padding); scale: optional (E,)
+    per-edge message scale (phi), applied before aggregation — int8
+    callers fold the dequant scale in here. Returns (num_segments, F)
+    float32 aggregates; empty segments zero-fill. The (E, F) message
+    tensor is never materialized.
     """
     assert agg in AGGS, agg
     n_src, f = x.shape
@@ -154,6 +165,6 @@ def fused_gather_aggregate_pallas(x, src, dst, num_segments: int, *,
                                        jnp.float32),
         scratch_shapes=[pltpu.VMEM((nb, 1), jnp.float32)],
         interpret=interpret,
-    )(x.astype(jnp.float32), src.reshape(1, e + e_pad),
+    )(x, src.reshape(1, e + e_pad),
       dst.reshape(1, e + e_pad), scale.reshape(1, e + e_pad))
     return out[:num_segments]

@@ -21,10 +21,14 @@ def fused_gather_aggregate(x, src, dst, valid=None, scale=None, *,
     """Gather source-node rows and aggregate them per destination segment
     in one fused pass — the (E, F) message tensor never reaches HBM.
 
-    x (N, F); src/dst (E,) int32 endpoint id streams of the packed COO
-    edge buffer, with padding marked by -1, any out-of-range id, or
-    ``valid == False``; scale: optional (E,) per-edge message scale (the
-    GCN symmetric norm). Returns (num_segments, F) float32.
+    x (N, F) — fp32, bf16, or int8; the table streams and stays
+    VMEM-resident at its storage width, accumulation is fp32 (int8
+    callers fold the per-tensor dequant scale into ``scale``, see
+    ``core.aggregations.gather_aggregate(precision=...)``); src/dst (E,)
+    int32 endpoint id streams of the packed COO edge buffer, with
+    padding marked by -1, any out-of-range id, or ``valid == False``;
+    scale: optional (E,) per-edge message scale (the GCN symmetric
+    norm). Returns (num_segments, F) float32.
 
     use_pallas=False falls back to the pure-jnp mirror oracle (ref.py) —
     a testing aid whose dense (N, E) / (N, E, F) intermediates do not

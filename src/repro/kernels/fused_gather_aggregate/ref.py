@@ -14,8 +14,11 @@ import jax.numpy as jnp
 
 def fused_gather_aggregate_ref(x, src, dst, num_segments: int, *,
                                scale=None, agg: str = "sum"):
-    """x: (N, F); src/dst: (E,) int32 (-1 / out-of-range = padding);
-    scale: optional (E,) -> (num_segments, F) float32."""
+    """x: (N, F) in any dtype the kernel accepts (fp32 / bf16 / int8 —
+    values pass through ``astype(float32)`` exactly, mirroring the
+    kernel's fp32 gather contraction; int8 callers fold the dequant
+    scale into ``scale``); src/dst: (E,) int32 (-1 / out-of-range =
+    padding); scale: optional (E,) -> (num_segments, F) float32."""
     xf = x.astype(jnp.float32)
     n_src, _ = xf.shape
     src = src.astype(jnp.int32)

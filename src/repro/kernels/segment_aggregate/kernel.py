@@ -17,6 +17,14 @@ stream. Block shapes:
   dst   (1, EB)  — destination segment ids (-1 = padding, never matches)
   out   (NB, F)  — this node tile's aggregate (revisited across j)
 Scratch: count (NB, 1) always; Welford mean/M2 (NB, F) for var/std.
+
+The kernel is dtype-polymorphic in the *message tiles*: fp32, bf16, or
+int8 blocks move HBM->VMEM at their storage width (the PrecisionPolicy
+bandwidth lever), and every accumulator — sum, count, Welford mean/M2 —
+is fp32 regardless (int8 sums are integer-valued fp32, i.e. exact
+int32-style accumulation). Low-precision inputs are dequantized by the
+caller (core.aggregations folds the per-tensor scale onto the output);
+the output is always fp32.
 """
 from __future__ import annotations
 
@@ -113,10 +121,12 @@ def segment_aggregate_pallas(messages, seg_ids, num_segments: int, *,
                              agg: str = "sum", edge_block: int = 128,
                              node_block: int = 128,
                              interpret: bool = True):
-    """messages: (E, F); seg_ids: (E,) int32 destination segment per edge,
-    -1 (or any id outside [0, num_segments)) on padding. Returns
-    (num_segments, F) float32 aggregates; empty segments zero-fill (the
-    var/std clamp floor counts as zero at fp32 tolerance).
+    """messages: (E, F) in fp32, bf16, or int8 — tiles stream at the
+    storage width, accumulation is fp32; seg_ids: (E,) int32 destination
+    segment per edge, -1 (or any id outside [0, num_segments)) on
+    padding. Returns (num_segments, F) float32 aggregates; empty
+    segments zero-fill (the var/std clamp floor counts as zero at fp32
+    tolerance).
     """
     assert agg in AGGS, agg
     e, f = messages.shape
@@ -150,5 +160,5 @@ def segment_aggregate_pallas(messages, seg_ids, num_segments: int, *,
                                        jnp.float32),
         scratch_shapes=scratch,
         interpret=interpret,
-    )(messages.astype(jnp.float32), dst)
+    )(messages, dst)
     return out[:num_segments]

@@ -18,9 +18,12 @@ def segment_aggregate(messages, seg_ids, valid=None, *, num_segments: int,
                       interpret: bool = True):
     """Aggregate packed COO edge messages per destination segment.
 
-    messages (E, F); seg_ids (E,) int32 destination ids, with padding
-    marked by -1, any id >= num_segments (the packed-batch overflow
-    bucket), or ``valid == False``. Returns (num_segments, F) float32.
+    messages (E, F) — fp32, bf16, or int8; tiles stream at the storage
+    width, accumulation is fp32 (callers dequantize int8 outputs, see
+    ``core.aggregations.segment_aggregate(precision=...)``); seg_ids
+    (E,) int32 destination ids, with padding marked by -1, any id >=
+    num_segments (the packed-batch overflow bucket), or
+    ``valid == False``. Returns (num_segments, F) float32.
 
     use_pallas=False falls back to the pure-jnp mirror oracle (ref.py) —
     a testing aid whose dense (N, E, F) min/max/var intermediates do not

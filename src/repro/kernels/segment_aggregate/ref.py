@@ -13,8 +13,10 @@ import jax.numpy as jnp
 
 def segment_aggregate_ref(messages, seg_ids, num_segments: int, *,
                           agg: str = "sum"):
-    """messages: (E, F); seg_ids: (E,) int32, -1 or out-of-range ids are
-    padding -> (num_segments, F) float32."""
+    """messages: (E, F) in any dtype the kernel accepts (fp32 / bf16 /
+    int8 — values pass through ``astype(float32)`` exactly, mirroring
+    the kernel's fp32 accumulation); seg_ids: (E,) int32, -1 or
+    out-of-range ids are padding -> (num_segments, F) float32."""
     m = messages.astype(jnp.float32)
     seg = seg_ids.astype(jnp.int32)
     node_ids = jnp.arange(num_segments, dtype=jnp.int32)[:, None]

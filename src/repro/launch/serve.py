@@ -9,11 +9,15 @@ GNN mode (--gnn): drains a graph request queue through fixed-shape packed
 GraphBatch programs — one jitted program, budget-sized buffers, reported
 in graphs/s (DESIGN_BATCHING.md). Requests too large for the packed
 budgets are answered through the padded per-graph oracle instead of being
-dropped (fallback count lands in stats).
+dropped (fallback count lands in stats). ``--precision`` serves through
+a low-precision PrecisionPolicy datapath (bf16 / int8 tiles, fp32
+accumulation; int8 grids are max-abs calibrated on the warmup batch) and
+reports the output error vs the fp32 program next to the throughput.
 
   PYTHONPATH=src python -m repro.launch.serve --gnn --conv gcn \
       --requests 256 --batch-graphs 32 [--agg-backend pallas] \
-      [--dataflow auto|aggregate_first|transform_first]
+      [--dataflow auto|aggregate_first|transform_first] \
+      [--precision fp32|bf16|int8]
 """
 from __future__ import annotations
 
@@ -103,29 +107,65 @@ def gnn_main(args):
     cfg = gnn_config(args.conv, reduced=args.reduced)
     ds = DATASETS["qm9"]
     cfg = dataclasses.replace(cfg, gnn_dataflow=args.dataflow,
-                              avg_degree=float(ds.avg_degree))
+                              avg_degree=float(ds.avg_degree),
+                              gnn_precision=args.precision)
     params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
     queue = [P.make_graph(ds, i) for i in range(args.requests)]
     node_budget = P.size_budget(args.batch_graphs, ds.avg_nodes)
     edge_budget = P.size_budget(args.batch_graphs,
                                 ds.avg_nodes * ds.avg_degree)
-    fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    # precision datapath: resolve the policy once; int8 grids are
+    # max-abs calibrated on the warmup window. Oversize requests can't
+    # ride a GraphBatch (pack_graphs would raise on them) — they are
+    # excluded from the calibration batch and still get served through
+    # the padded fallback below.
+    warm = queue[:args.batch_graphs]
+    warm_fit = [g for g in warm
+                if P.graph_fits_budget(g, node_budget, edge_budget)]
+    warm_batch = None
+    if warm_fit:
+        warm_batch, _ = P.pack_graphs(warm_fit, node_budget, edge_budget,
+                                      args.batch_graphs)
+        policy = G.calibrated_policy(params, cfg,
+                                     G.packed_to_device(warm_batch))
+    else:   # nothing packable to calibrate on: uncalibrated grids
+        policy = G.resolve_policy(cfg)
+    fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b, None, policy))
     # oversize requests fall back to the padded per-graph oracle so every
     # request is answered, not silently dropped
-    fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el))
+    fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el, None, policy))
 
     # warmup: compile the single fixed-shape program
-    warm = queue[:args.batch_graphs]
     _, _ = drain_gnn_queue(fn, params, warm, node_budget, edge_budget,
                            args.batch_graphs, fallback_fn)
     _, stats = drain_gnn_queue(fn, params, queue, node_budget, edge_budget,
                                args.batch_graphs, fallback_fn)
-    print(f"conv={args.conv} served {stats['served']} graphs in "
+    stats["precision"] = policy.name
+    stats["compute_bytes"] = policy.compute_bytes
+    if not policy.is_fp32 and warm_batch is not None:
+        # per-precision parity: output error of the low-precision program
+        # vs the fp32 program on the warmup batch (pin an explicit fp32
+        # policy — cfg.gnn_precision must not leak into the reference)
+        from repro.core import quantization as Q
+        fp32 = Q.resolve_policy("fp32", cfg.gnn_num_layers)
+        dev = G.packed_to_device(warm_batch)
+        ref = jax.jit(lambda p, b: G.apply_packed(
+            p, cfg, b, None, fp32))(params, dev)
+        got = fn(params, dev)
+        k = int(warm_batch["num_graphs"])
+        stats["output_error_vs_fp32"] = Q.error_stats(
+            np.asarray(got)[:k], np.asarray(ref)[:k])
+    err = stats.get("output_error_vs_fp32")
+    err_txt = "" if err is None else \
+        f", |err vs fp32| max {err['max_abs']:.2e} " \
+        f"(SQNR {err['sqnr_db']:.0f} dB)"
+    print(f"conv={args.conv} precision={policy.name} served "
+          f"{stats['served']} graphs in "
           f"{stats['n_batches']} packed batches "
           f"({stats['graphs_per_s']:.0f} graphs/s, node-slot utilization "
           f"{stats['node_slot_utilization'] * 100:.0f}%, "
           f"{stats['fallback_served']} oversize via padded fallback, "
-          f"dropped {stats['dropped']})")
+          f"dropped {stats['dropped']}){err_txt}")
     return stats
 
 
@@ -150,6 +190,11 @@ def main():
                     choices=["auto", "aggregate_first", "transform_first"],
                     help="transform/aggregate ordering for linear convs "
                          "(auto = per-layer cost model)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "bf16", "int8"],
+                    help="PrecisionPolicy datapath for --gnn serving "
+                         "(low-precision tiles, fp32 accumulation; int8 "
+                         "grids calibrated on the warmup batch)")
     args = ap.parse_args()
 
     if args.gnn:
