@@ -10,6 +10,11 @@ The paper's Listing-1 API shape is preserved: a single config object the
 user trains against (here: init/apply over padded graphs), handed to
 ``core.project.Project`` for accelerator generation.
 
+Execution tiers: ``apply`` (padded per-graph oracle) -> ``apply_packed``
+(one jitted program over a packed GraphBatch) -> ``apply_packed_sharded``
+(one SPMD program over a ("data",) device mesh, each device consuming
+its own GraphBatch shard — see DESIGN_BATCHING.md §Sharded waves).
+
 Precision: ``gnn_precision`` names the model's PrecisionPolicy (fp32 |
 bf16 | int8; ``apply``/``apply_packed`` also accept a fully resolved —
 possibly calibrated — ``PrecisionPolicy`` via ``policy=``). Each layer
@@ -300,6 +305,67 @@ def apply_packed(params, cfg: GNNModelConfig, batch: dict,
     if cfg.output_activation:
         out = act(cfg.output_activation)(out)
     return out
+
+
+def stack_shards(shards) -> dict:
+    """Host ShardedBatch shards -> one stacked device-ready dict with a
+    leading shard dim (num_shards, ...), stripping the host-only ``y``
+    like ``packed_to_device``. Accepts a ShardedBatch or a plain list of
+    same-shape GraphBatch dicts."""
+    shards = getattr(shards, "shards", shards)
+    return {k: jnp.stack([jnp.asarray(b[k]) for b in shards])
+            for k in shards[0] if k != "y"}
+
+
+def make_sharded_apply(cfg: GNNModelConfig, mesh,
+                       quant: Q.FPX | None = None, policy=None):
+    """Build the jitted SPMD program for data-parallel sharded packed
+    inference over a 1-D ("data",) mesh (launch.mesh.make_data_mesh).
+
+    Params replicate (distributed.sharding.replicated); the stacked
+    batch's leading shard dim splits over "data" (graph_batch_sharding)
+    so each device consumes exactly its own GraphBatch shard — the
+    per-device program is ``apply_packed`` unchanged, which is why
+    sharded outputs match the single-device program to fp32 tolerance
+    at every precision and aggregation backend. Graph tasks return
+    (num_shards, max_graphs, out_dim) — restore host order with
+    ``data.pipeline.gather_shard_outputs``; node tasks return the
+    stacked per-shard node tables (num_shards, node_budget, F).
+
+    Trace-time state (the aggregation backend scope) is baked in on the
+    first call, like ``apply_packed`` under jit. Hold on to the returned
+    callable across waves so XLA compiles exactly once.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import (graph_batch_sharding,
+                                            replicated)
+
+    def per_shard(params, batch):
+        batch = {k: v[0] for k, v in batch.items()}
+        return apply_packed(params, cfg, batch, quant, policy)[None]
+
+    fn = shard_map(per_shard, mesh=mesh,
+                   in_specs=(P(), P("data")), out_specs=P("data"),
+                   check_rep=False)
+    return jax.jit(fn, in_shardings=(replicated(mesh),
+                                     graph_batch_sharding(mesh)))
+
+
+def apply_packed_sharded(params, cfg: GNNModelConfig, shards, mesh=None,
+                         quant: Q.FPX | None = None, policy=None):
+    """One-shot data-parallel sharded forward: stack ``shards`` (a
+    ShardedBatch, a list of same-shape GraphBatch dicts, or an already
+    stacked dict) and run them through one SPMD program, one shard per
+    device. ``mesh=None`` builds the ("data",) mesh over the first
+    num_shards local devices. Retraces on every call — serving and
+    benchmark loops should hold on to ``make_sharded_apply`` instead."""
+    stacked = shards if isinstance(shards, dict) else stack_shards(shards)
+    if mesh is None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(stacked["node_feat"].shape[0])
+    return make_sharded_apply(cfg, mesh, quant, policy)(params, stacked)
 
 
 def activation_ranges(params, cfg: GNNModelConfig, batch: dict) -> dict:

@@ -177,6 +177,12 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     # the storage bytes per value, so the forests price the bandwidth
     # cut of low-precision node/message tiles
     "precision_bf16", "precision_int8", "compute_bytes",
+    # data-parallel sharding axis: num_shards one-hot (single-device =
+    # all zero, the legacy-database default). The node/edge budgets
+    # above are *per shard* — a sharded design replicates the same
+    # buffers on every device — so the one-hot alone carries the
+    # wave-throughput scaling signal
+    "shards_2", "shards_4", "shards_8",
 ]
 
 
@@ -196,9 +202,11 @@ def _resolved_agg_width(design: dict) -> float:
 
 def features(design: dict) -> np.ndarray:
     """Design-point dict (see dse.sample_design) -> feature vector.
-    Batch-budget fields default to the single-graph setting and the
-    precision axis defaults to fp32 (4 B/value), so databases recorded
-    before the packed-batch / precision refactors still featurize."""
+    Batch-budget fields default to the single-graph setting, the
+    precision axis defaults to fp32 (4 B/value), and the sharding axis
+    defaults to one device (zero one-hot), so databases recorded before
+    the packed-batch / precision / sharding refactors still
+    featurize."""
     onehot = [1.0 if design["conv"] == c else 0.0 for c in CONV_TYPES]
     return np.array(onehot + [
         design["gnn_hidden_dim"], design["gnn_out_dim"],
@@ -220,4 +228,7 @@ def features(design: dict) -> np.ndarray:
         1.0 if design.get("precision", "fp32") == "bf16" else 0.0,
         1.0 if design.get("precision", "fp32") == "int8" else 0.0,
         float(BYTE_WIDTHS[design.get("precision", "fp32")]),
+        1.0 if design.get("num_shards", 1) == 2 else 0.0,
+        1.0 if design.get("num_shards", 1) == 4 else 0.0,
+        1.0 if design.get("num_shards", 1) == 8 else 0.0,
     ], dtype=float)

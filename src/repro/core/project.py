@@ -67,7 +67,7 @@ class Project:
                  edge_budget: int | None = None,
                  edge_block: int = 128, node_block: int = 128,
                  agg_backend: str = "xla", dataflow: str | None = None,
-                 precision=None):
+                 precision=None, num_shards: int = 1):
         self.name = name
         # dataflow override + dataset degree flow into the per-layer
         # transform/aggregate planner (convs.resolve_dataflow);
@@ -111,6 +111,13 @@ class Project:
         self.edge_block = edge_block
         self.node_block = node_block
         self.agg_backend = agg_backend
+        # data-parallel sharding: >1 splits each testbench/serving wave
+        # into per-device packed shards over a ("data",) mesh, the
+        # budgets above staying *per-shard* (graph-level partitioning —
+        # the parallelization-factor knob one level above the kernels)
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
         self._fn = None
         self._fn_packed = None
         self._compiled = None
@@ -163,6 +170,7 @@ class Project:
                        "edge_block": self.edge_block,
                        "node_block": self.node_block,
                        "agg_backend": self.agg_backend,
+                       "num_shards": self.num_shards,
                        "dataflow": cfg.gnn_dataflow,
                        "dataflow_per_layer": [
                            Cv.resolve_dataflow(cfg.conv_cfg(i))
@@ -246,7 +254,10 @@ class Project:
         vs the float reference and the measured mean runtime. With
         ``packed`` (default) the same graphs are also drained through the
         packed GraphBatch program, reporting throughput in graphs/s next
-        to the single-graph latency. Quantized projects (int8 policy or
+        to the single-graph latency; ``num_shards > 1`` projects
+        additionally drain per-device shard waves through the sharded
+        SPMD program (``tb["sharded"]``, skipped with a note when the
+        host has fewer devices than shards). Quantized projects (int8 policy or
         the legacy fixed path) also report quantization-error stats
         (mean/max/SQNR-dB, ``quantization.quant_error_stats``)."""
         if self.params is None:
@@ -310,6 +321,8 @@ class Project:
                 tb["quant_error"]["weights"] = Q.error_stats(*flat)
         if packed:
             tb["packed"] = self._run_packed_testbench(params)
+            if self.num_shards > 1:
+                tb["sharded"] = self._run_sharded_testbench(params)
         with open(os.path.join(self.build_dir, "tb_data.json"), "w") as f:
             json.dump(tb, f, indent=1)
         return tb
@@ -356,6 +369,66 @@ class Project:
             "n_batches": len(batches),
             "n_graphs": n_graphs,
             "n_dropped": len(dropped),
+            "batch_graphs": self.batch_graphs,
+            "node_budget": self.node_budget,
+            "edge_budget": self.edge_budget,
+        }
+
+    def _run_sharded_testbench(self, params) -> dict:
+        """Drain the testbench graphs through the data-parallel sharded
+        program — one SPMD program, each device of the ("data",) mesh
+        consuming its own packed shard — and report sharded graphs/s
+        next to the single-device packed numbers, with MAE against the
+        same per-graph float references (host order restored by
+        gather_shard_outputs)."""
+        if len(jax.devices()) < self.num_shards:
+            return {"skipped": f"needs {self.num_shards} devices, have "
+                               f"{len(jax.devices())} (set XLA_FLAGS="
+                               "--xla_force_host_platform_device_count)",
+                    "num_shards": self.num_shards}
+        from repro.core import aggregations as agg_mod
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(self.num_shards)
+        quant = self.fpx if self.float_or_fixed == "fixed" else None
+        base = G.make_sharded_apply(self.cfg, mesh, quant, self.policy)
+
+        def fn(p, b):
+            # trace-time backend scope, as gen_hw_model bakes into the
+            # single-device programs
+            with agg_mod.backend_scope(self.agg_backend, self.edge_block,
+                                       self.node_block):
+                return base(p, b)
+
+        waves, dropped = data_mod.pack_dataset(
+            self._tb_graphs, self.node_budget, self.edge_budget,
+            self.batch_graphs, num_shards=self.num_shards)
+        stacked = [G.stack_shards(w) for w in waves]
+        for b in stacked:                           # warmup / compile
+            jax.block_until_ready(fn(params, b))
+        t0 = time.perf_counter()
+        outs = [fn(params, b) for b in stacked]
+        jax.block_until_ready(outs)
+        total_s = time.perf_counter() - t0
+        n_graphs = sum(w.n_graphs for w in waves)
+        maes = []
+        if self.cfg.task == "graph":
+            refs = iter(r for g, r in zip(self._tb_graphs, self._tb_refs)
+                        if data_mod.graph_fits_budget(
+                            g, self.node_budget, self.edge_budget))
+            for w, out in zip(waves, outs):
+                host = data_mod.gather_shard_outputs(np.asarray(out),
+                                                     w.index)
+                for i in range(w.n_graphs):
+                    maes.append(float(np.mean(np.abs(host[i]
+                                                     - next(refs)))))
+        return {
+            "mae": float(np.mean(maes)) if maes else float("nan"),
+            "graphs_per_s": n_graphs / max(total_s, 1e-12),
+            "mean_wave_ms": total_s / max(len(waves), 1) * 1e3,
+            "n_waves": len(waves),
+            "n_graphs": n_graphs,
+            "n_dropped": len(dropped),
+            "num_shards": self.num_shards,
             "batch_graphs": self.batch_graphs,
             "node_budget": self.node_budget,
             "edge_budget": self.edge_budget,
@@ -444,6 +517,30 @@ class Project:
             "graphs_per_s": self.batch_graphs / max(latency_p, 1e-18),
             "per_graph_latency_s": latency_p / max(self.batch_graphs, 1),
             "compile_s": compile_packed_s,
+        }
+        # data-parallel sharded scaling model: every device runs the
+        # *same* per-shard program concurrently (params replicated, no
+        # inter-device traffic during the layer stack), so the wave
+        # latency is the per-shard latency plus the host gather of the
+        # per-device outputs over ICI — near-linear in num_shards, and
+        # what benchmarks/sharded_throughput.py gates against.
+        if self.cfg.task == "graph":
+            out_vals = self.batch_graphs * (self.cfg.mlp_head.out_dim
+                                            if self.cfg.mlp_head else 1)
+        else:
+            out_vals = self.node_budget * self.cfg.gnn_output_dim
+        gather_bytes = 0.0 if self.num_shards == 1 \
+            else self.num_shards * out_vals * 4.0
+        latency_sh = latency_p + gather_bytes / self.target.link_bw
+        wave_graphs = self.num_shards * self.batch_graphs
+        packed["sharded"] = {
+            "num_shards": self.num_shards,
+            "latency_s": latency_sh,
+            "gather_bytes": gather_bytes,
+            "wave_graphs": wave_graphs,
+            "graphs_per_s": wave_graphs / max(latency_sh, 1e-18),
+            "scaling_efficiency": (wave_graphs / max(latency_sh, 1e-18))
+            / max(self.num_shards * packed["graphs_per_s"], 1e-18),
         }
         report = {
             "packed": packed,

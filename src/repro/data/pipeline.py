@@ -7,7 +7,10 @@ molecular graphs (QM9/MoleculeNet-like size statistics) for the GNN paper
 workloads. Graphs come in two execution formats: per-graph padded COO
 (``Graph``/``graph_batch``) and the packed ``GraphBatch`` IR
 (``pack_graphs``/``graph_batch_packed``) that fuses many graphs into one
-budget-sized buffer — see DESIGN_BATCHING.md.
+budget-sized buffer — see DESIGN_BATCHING.md. ``shard_pack`` /
+``pack_dataset(..., num_shards=)`` partition the stream one level
+further into per-device shard waves for data-parallel sharded inference
+over a ("data",) mesh (``gnn_model.apply_packed_sharded``).
 """
 from __future__ import annotations
 
@@ -134,6 +137,25 @@ def graph_fits_budget(g: Graph, node_budget: int, edge_budget: int) -> bool:
     return g.num_nodes <= node_budget and g.num_edges <= edge_budget
 
 
+def empty_graph_batch(node_budget: int, edge_budget: int, max_graphs: int,
+                      node_feat_dim: int, edge_feat_dim: int,
+                      num_targets: int = 1) -> dict:
+    """All-padding GraphBatch (``num_graphs == 0``) in the standard
+    layout: node/edge slots in the overflow bucket (graph_id ==
+    max_graphs, edge src == -1), no valid graphs. This is what an idle
+    shard of a sharded wave consumes — every device of the mesh must see
+    identical static shapes, graphs or not."""
+    return {"node_feat": np.zeros((node_budget, node_feat_dim), np.float32),
+            "node_graph_id": np.full((node_budget,), max_graphs, np.int32),
+            "edge_index": np.full((edge_budget, 2), -1, np.int32),
+            "edge_feat": np.zeros((edge_budget, edge_feat_dim), np.float32),
+            "edge_graph_id": np.full((edge_budget,), max_graphs, np.int32),
+            "graph_valid": np.zeros((max_graphs,), bool),
+            "graph_num_nodes": np.zeros((max_graphs,), np.int32),
+            "num_graphs": np.int32(0),
+            "y": np.zeros((max_graphs, num_targets), np.float32)}
+
+
 def pack_graphs(graphs, node_budget: int, edge_budget: int,
                 max_graphs: int) -> tuple:
     """Greedily pack a prefix of ``graphs`` into one GraphBatch dict.
@@ -150,49 +172,142 @@ def pack_graphs(graphs, node_budget: int, edge_budget: int,
             f"graph with {graphs[0].num_nodes} nodes/"
             f"{graphs[0].num_edges} edges exceeds budget "
             f"({node_budget} nodes/{edge_budget} edges)")
-    f = graphs[0].node_feat.shape[1]
-    fe = graphs[0].edge_feat.shape[1]
-    t = graphs[0].y.shape[0]
-    node_feat = np.zeros((node_budget, f), np.float32)
-    node_graph_id = np.full((node_budget,), max_graphs, np.int32)
-    edge_index = np.full((edge_budget, 2), -1, np.int32)
-    edge_feat = np.zeros((edge_budget, fe), np.float32)
-    edge_graph_id = np.full((edge_budget,), max_graphs, np.int32)
-    y = np.zeros((max_graphs, t), np.float32)
-    graph_valid = np.zeros((max_graphs,), bool)
-    graph_num_nodes = np.zeros((max_graphs,), np.int32)
+    batch = empty_graph_batch(node_budget, edge_budget, max_graphs,
+                              graphs[0].node_feat.shape[1],
+                              graphs[0].edge_feat.shape[1],
+                              graphs[0].y.shape[0])
     n_used = e_used = k = 0
     for g in graphs:
         if k == max_graphs or n_used + g.num_nodes > node_budget \
                 or e_used + g.num_edges > edge_budget:
             break
         n, e = g.num_nodes, g.num_edges
-        node_feat[n_used:n_used + n] = g.node_feat[:n]
-        node_graph_id[n_used:n_used + n] = k
-        edge_index[e_used:e_used + e] = g.edge_index[:e] + n_used
-        edge_feat[e_used:e_used + e] = g.edge_feat[:e]
-        edge_graph_id[e_used:e_used + e] = k
-        y[k] = g.y
-        graph_valid[k] = True
-        graph_num_nodes[k] = n
+        batch["node_feat"][n_used:n_used + n] = g.node_feat[:n]
+        batch["node_graph_id"][n_used:n_used + n] = k
+        batch["edge_index"][e_used:e_used + e] = g.edge_index[:e] + n_used
+        batch["edge_feat"][e_used:e_used + e] = g.edge_feat[:e]
+        batch["edge_graph_id"][e_used:e_used + e] = k
+        batch["y"][k] = g.y
+        batch["graph_valid"][k] = True
+        batch["graph_num_nodes"][k] = n
         n_used += n
         e_used += e
         k += 1
-    batch = {"node_feat": node_feat, "node_graph_id": node_graph_id,
-             "edge_index": edge_index, "edge_feat": edge_feat,
-             "edge_graph_id": edge_graph_id, "graph_valid": graph_valid,
-             "graph_num_nodes": graph_num_nodes,
-             "num_graphs": np.int32(k), "y": y}
+    batch["num_graphs"] = np.int32(k)
     return batch, k
 
 
+# ------------------------------------------------------ sharded packing --
+#
+# Data-parallel execution across a ("data",) device mesh: one *wave* is
+# num_shards GraphBatch shards with identical static shapes, one per
+# device, run by a single SPMD program (gnn_model.apply_packed_sharded).
+# The partitioner below is the graph-level analogue of GNNBuilder's
+# parallelization factors one level up: instead of splitting a matmul
+# over MAC lanes, it splits the request stream over devices.
+
+@dataclasses.dataclass
+class ShardedBatch:
+    """One wave of per-device packed shards.
+
+    ``shards`` holds ``num_shards`` GraphBatch dicts with identical
+    static shapes (idle shards are ``empty_graph_batch``).
+    ``index[s][j]`` is the wave-relative position of the graph packed
+    into shard ``s`` row ``j`` — a permutation of range(n_graphs), so
+    ``gather_shard_outputs`` can restore host order after the per-device
+    outputs come back stacked."""
+    shards: list
+    index: list
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_graphs(self) -> int:
+        return sum(len(ix) for ix in self.index)
+
+
+def shard_pack(graphs, node_budget: int, edge_budget: int, max_graphs: int,
+               num_shards: int) -> tuple:
+    """Partition a prefix of ``graphs`` into ``num_shards`` per-device
+    packed shards under the same *per-shard* node/edge budgets.
+
+    Greedy least-loaded: each graph lands in the shard with the fewest
+    used node slots that can still take it, so shards stay balanced
+    while each shard's internal order follows the stream. Stops at the
+    first graph no shard can accept (budgets or max_graphs bind).
+    Returns (ShardedBatch, n_consumed); the consumed prefix is assigned
+    exhaustively — every one of the first n_consumed graphs rides some
+    shard. Raises ValueError if graphs[0] cannot fit an empty shard
+    (the caller must drop or resize, as with pack_graphs)."""
+    if not graphs:
+        raise ValueError("shard_pack needs at least one graph")
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if not graph_fits_budget(graphs[0], node_budget, edge_budget):
+        raise ValueError(
+            f"graph with {graphs[0].num_nodes} nodes/"
+            f"{graphs[0].num_edges} edges exceeds the per-shard budget "
+            f"({node_budget} nodes/{edge_budget} edges)")
+    assign: list = [[] for _ in range(num_shards)]
+    used_n = [0] * num_shards
+    used_e = [0] * num_shards
+    k = 0
+    for pos, g in enumerate(graphs):
+        cands = [s for s in range(num_shards)
+                 if len(assign[s]) < max_graphs
+                 and used_n[s] + g.num_nodes <= node_budget
+                 and used_e[s] + g.num_edges <= edge_budget]
+        if not cands:
+            break
+        s = min(cands, key=lambda s: (used_n[s], used_e[s], s))
+        assign[s].append(pos)
+        used_n[s] += g.num_nodes
+        used_e[s] += g.num_edges
+        k += 1
+    f = graphs[0].node_feat.shape[1]
+    fe = graphs[0].edge_feat.shape[1]
+    t = graphs[0].y.shape[0]
+    shards = []
+    for s in range(num_shards):
+        if assign[s]:
+            batch, _ = pack_graphs([graphs[i] for i in assign[s]],
+                                   node_budget, edge_budget, max_graphs)
+        else:
+            batch = empty_graph_batch(node_budget, edge_budget, max_graphs,
+                                      f, fe, t)
+        shards.append(batch)
+    return ShardedBatch(shards, assign), k
+
+
+def gather_shard_outputs(outs, index) -> np.ndarray:
+    """Stacked per-shard graph outputs (num_shards, max_graphs, ...) ->
+    wave host order (n_graphs, ...), inverting a ShardedBatch's
+    ``index`` permutation. Graph tasks only — node-task outputs are
+    per-shard packed node tables with no global row order to restore."""
+    outs = np.asarray(outs)
+    n = sum(len(ix) for ix in index)
+    host = np.zeros((n,) + outs.shape[2:], outs.dtype)
+    for s, ix in enumerate(index):
+        for j, pos in enumerate(ix):
+            host[pos] = outs[s, j]
+    return host
+
+
 def pack_dataset(graphs, node_budget: int, edge_budget: int,
-                 max_graphs: int) -> tuple:
+                 max_graphs: int, num_shards: int = 1) -> tuple:
     """Pack an entire dataset into a list of GraphBatch dicts.
 
     Graphs that can never fit the budget on their own are returned in
     ``dropped`` instead of stalling the stream. Order is preserved:
     concatenating the valid rows of each batch visits the non-dropped
+    graphs in dataset order.
+
+    With ``num_shards > 1`` the batches are ShardedBatch *waves*
+    instead: each wave carries ``num_shards`` per-device shards under
+    the same per-shard budgets (``shard_pack``), and concatenating the
+    waves' ``gather_shard_outputs`` results visits the non-dropped
     graphs in dataset order.
     """
     batches, dropped = [], []
@@ -202,9 +317,14 @@ def pack_dataset(graphs, node_budget: int, edge_budget: int,
             dropped.append(graphs[i])
             i += 1
             continue
-        batch, k = pack_graphs(graphs[i:], node_budget, edge_budget,
-                               max_graphs)
-        batches.append(batch)
+        if num_shards > 1:
+            wave, k = shard_pack(graphs[i:], node_budget, edge_budget,
+                                 max_graphs, num_shards)
+            batches.append(wave)
+        else:
+            batch, k = pack_graphs(graphs[i:], node_budget, edge_budget,
+                                   max_graphs)
+            batches.append(batch)
         i += k
     return batches, dropped
 

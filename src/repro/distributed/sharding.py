@@ -5,6 +5,18 @@ swapping a rule re-parallelizes the generated program without touching the
 model definition. ``spec_for`` drops mesh axes that do not divide a dim
 (e.g. 8 KV heads on a 16-way model axis) instead of failing — the fallback
 is replication, exactly like setting a parallelism factor to 1.
+
+Two consumers share this module:
+
+* the LM scaffold — the logical axes in the rules tables below (batch,
+  heads, embed, ...) over 2-D/3-D training and serving meshes;
+* the packed GNN path — stacked GraphBatch shard waves over a 1-D
+  ``("data",)`` mesh (``launch.mesh.make_data_mesh``): the leading shard
+  dim takes ``graph_batch_sharding`` while params stay ``replicated``,
+  and ``gnn_model.apply_packed_sharded`` runs one SPMD program with each
+  device consuming its own shard. No rules table is needed — a
+  GraphBatch is opaque to GSPMD; the partition is decided at pack time
+  by ``data.pipeline.shard_pack``.
 """
 from __future__ import annotations
 
@@ -182,6 +194,21 @@ def constrain(x, mesh: Mesh, axes: Sequence, rules: Mapping | None = None):
     """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
     spec = spec_for(axes, x.shape, mesh, rules)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement — the params of the sharded GNN path
+    (every device holds the whole model; only the graphs are split)."""
+    return NamedSharding(mesh, P())
+
+
+def graph_batch_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-dim ``data`` placement for stacked GraphBatch shard
+    waves: array leaves are (num_shards, ...), one shard per device of
+    the 1-D ("data",) mesh; trailing dims replicate. The PartitionSpec
+    is rank-agnostic, so the same sharding serves every leaf of the
+    stacked batch dict (node tables, edge streams, scalars-per-shard)."""
+    return NamedSharding(mesh, P("data"))
 
 
 def batch_axes(mesh: Mesh) -> tuple:

@@ -24,6 +24,24 @@ def make_mesh_from_devices(devices, shape, axes) -> Mesh:
     return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
+def make_data_mesh(num_shards: int) -> Mesh:
+    """1-D ("data",) mesh over the first ``num_shards`` local devices —
+    the sharded packed GNN inference mesh (each device consumes one
+    GraphBatch shard, params replicate; gnn_model.apply_packed_sharded).
+    On a CPU host, simulate devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N set before jax
+    initializes."""
+    devs = jax.devices()
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    if len(devs) < num_shards:
+        raise ValueError(
+            f"need {num_shards} devices for {num_shards} shards, have "
+            f"{len(devs)}; on CPU set XLA_FLAGS="
+            "--xla_force_host_platform_device_count before jax starts")
+    return Mesh(np.asarray(devs[:num_shards]), ("data",))
+
+
 def make_host_mesh(model: int = 1, data: int | None = None) -> Mesh:
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     devs = jax.devices()

@@ -14,10 +14,15 @@ a low-precision PrecisionPolicy datapath (bf16 / int8 tiles, fp32
 accumulation; int8 grids are max-abs calibrated on the warmup batch) and
 reports the output error vs the fp32 program next to the throughput.
 
+``--shards N`` drains the queue into per-device packed shard waves over
+a ("data",) device mesh instead — one SPMD program, params replicated,
+each device consuming its own shard (the oversize fallback is
+unchanged). Full lifecycle: docs/SERVING.md.
+
   PYTHONPATH=src python -m repro.launch.serve --gnn --conv gcn \
       --requests 256 --batch-graphs 32 [--agg-backend pallas] \
       [--dataflow auto|aggregate_first|transform_first] \
-      [--precision fp32|bf16|int8]
+      [--precision fp32|bf16|int8] [--shards 4]
 """
 from __future__ import annotations
 
@@ -51,11 +56,14 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
     the packed program ``fn``; every call sees the same static shapes, so
     XLA compiles exactly once. Returns (outputs per batch, stats).
 
-    Graphs too large for the packed budgets cannot ride a GraphBatch.
-    With ``fallback_fn`` (the padded per-graph oracle ``G.apply``) they
-    are answered one at a time through it instead of being dropped —
-    every request gets a response; the fallback count is reported in
-    stats. Without it they are dropped and counted, as before."""
+    Request lifecycle (docs/SERVING.md): requests that fit the budgets
+    are greedily packed into fixed-shape GraphBatches and answered by
+    the packed program. Requests too large for the budgets cannot ride
+    a GraphBatch; with ``fallback_fn`` (the padded per-graph oracle
+    ``G.apply``, jitted) each one is answered individually through it,
+    so every request gets a response and ``stats["fallback_served"]``
+    counts them. Only when no fallback program is supplied are oversize
+    requests dropped (``stats["dropped"]``)."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
     batches, oversize = P.pack_dataset(queue, node_budget, edge_budget,
@@ -88,6 +96,63 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
         "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
         "node_slot_utilization":
             slots_used / max(len(batches) * node_budget, 1),
+        "total_s": total_s,
+    }
+    return outs + fallback_outs, stats
+
+
+def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
+                            edge_budget: int, batch_graphs: int,
+                            num_shards: int, fallback_fn=None,
+                            task: str = "graph"):
+    """Sharded drain: requests are partitioned into per-device shard
+    waves (data.pipeline.pack_dataset(num_shards=)) and each wave runs
+    as one SPMD program over the ("data",) mesh — ``fn`` from
+    ``gnn_model.make_sharded_apply``, compiled exactly once. Graph-task
+    outputs come back in wave host order (gather_shard_outputs); node
+    tasks (``task="node"``) get the raw stacked per-shard node tables
+    per wave — their row order is shard-local, so there is no global
+    host order to restore. The oversize padded fallback behaves exactly
+    as in ``drain_gnn_queue``."""
+    from repro.core import gnn_model as G
+    from repro.data import pipeline as P
+    waves, oversize = P.pack_dataset(queue, node_budget, edge_budget,
+                                     batch_graphs, num_shards=num_shards)
+    served = 0
+    slots_used = 0
+    t0 = time.perf_counter()
+    dev_outs = []
+    for w in waves:
+        dev_outs.append(fn(params, G.stack_shards(w)))
+        served += w.n_graphs
+        slots_used += sum(int((b["node_graph_id"] < batch_graphs).sum())
+                          for b in w.shards)
+    fallback_outs = []
+    if fallback_fn is not None:
+        for g in oversize:
+            el = {"node_feat": jnp.asarray(g.node_feat),
+                  "edge_index": jnp.asarray(g.edge_index),
+                  "edge_feat": jnp.asarray(g.edge_feat),
+                  "num_nodes": jnp.int32(g.num_nodes)}
+            fallback_outs.append(fallback_fn(params, el))
+    jax.block_until_ready(dev_outs + fallback_outs)
+    total_s = time.perf_counter() - t0
+    if task == "graph":
+        outs = [P.gather_shard_outputs(np.asarray(o), w.index)
+                for w, o in zip(waves, dev_outs)]
+    else:
+        outs = dev_outs
+    n_fallback = len(fallback_outs)
+    stats = {
+        "served": served + n_fallback,
+        "packed_served": served,
+        "fallback_served": n_fallback,
+        "dropped": len(oversize) - n_fallback,
+        "n_batches": len(waves),
+        "num_shards": num_shards,
+        "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
+        "node_slot_utilization":
+            slots_used / max(len(waves) * num_shards * node_budget, 1),
         "total_s": total_s,
     }
     return outs + fallback_outs, stats
@@ -135,11 +200,27 @@ def gnn_main(args):
     # request is answered, not silently dropped
     fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el, None, policy))
 
+    if args.shards > 1:
+        # data-parallel sharded drain: waves of per-device shards over a
+        # ("data",) mesh, params replicated, one SPMD program
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(args.shards)
+        sharded_fn = G.make_sharded_apply(cfg, mesh, None, policy)
+
+        def drain(q):
+            return drain_gnn_queue_sharded(
+                sharded_fn, params, q, node_budget, edge_budget,
+                args.batch_graphs, args.shards, fallback_fn,
+                task=cfg.task)
+    else:
+        def drain(q):
+            return drain_gnn_queue(fn, params, q, node_budget,
+                                   edge_budget, args.batch_graphs,
+                                   fallback_fn)
+
     # warmup: compile the single fixed-shape program
-    _, _ = drain_gnn_queue(fn, params, warm, node_budget, edge_budget,
-                           args.batch_graphs, fallback_fn)
-    _, stats = drain_gnn_queue(fn, params, queue, node_budget, edge_budget,
-                               args.batch_graphs, fallback_fn)
+    _, _ = drain(warm)
+    _, stats = drain(queue)
     stats["precision"] = policy.name
     stats["compute_bytes"] = policy.compute_bytes
     if not policy.is_fp32 and warm_batch is not None:
@@ -159,9 +240,11 @@ def gnn_main(args):
     err_txt = "" if err is None else \
         f", |err vs fp32| max {err['max_abs']:.2e} " \
         f"(SQNR {err['sqnr_db']:.0f} dB)"
+    shards_txt = "" if args.shards <= 1 else \
+        f" over {args.shards} device shards"
     print(f"conv={args.conv} precision={policy.name} served "
           f"{stats['served']} graphs in "
-          f"{stats['n_batches']} packed batches "
+          f"{stats['n_batches']} packed batches{shards_txt} "
           f"({stats['graphs_per_s']:.0f} graphs/s, node-slot utilization "
           f"{stats['node_slot_utilization'] * 100:.0f}%, "
           f"{stats['fallback_served']} oversize via padded fallback, "
@@ -195,6 +278,12 @@ def main():
                     help="PrecisionPolicy datapath for --gnn serving "
                          "(low-precision tiles, fp32 accumulation; int8 "
                          "grids calibrated on the warmup batch)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="data-parallel device shards for --gnn serving: "
+                         "the queue drains into per-device packed shard "
+                         "waves over a ('data',) mesh (needs >= N "
+                         "devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
     args = ap.parse_args()
 
     if args.gnn:

@@ -1,0 +1,245 @@
+"""Data-parallel sharded packed inference: shard_pack partitioning
+invariants, sharded-vs-single-device parity over the conv x precision x
+backend grid on simulated host devices, host-order gather, uneven shard
+counts, and the num_shards DSE/feature plumbing."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core import perf_model as PM
+from repro.data import pipeline as P
+
+DS = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
+                       node_feat_dim=7, edge_feat_dim=3, seed=5)
+
+
+def _graphs(n=10):
+    return [P.make_graph(DS, i) for i in range(n)]
+
+
+# ----------------------------------------------------- shard_pack -------
+def test_shard_pack_partitions_and_respects_budgets():
+    graphs = _graphs(12)
+    wave, k = P.shard_pack(graphs, 96, 192, 8, num_shards=3)
+    assert k == wave.n_graphs
+    seen = sorted(pos for ix in wave.index for pos in ix)
+    assert seen == list(range(k))            # consumed prefix, exactly once
+    for shard, ix in zip(wave.shards, wave.index):
+        assert int(shard["num_graphs"]) == len(ix)
+        assert int((shard["node_graph_id"] < 8).sum()) <= 96
+        assert int((shard["edge_index"][:, 0] >= 0).sum()) <= 192
+        # shard-internal order follows the stream
+        assert ix == sorted(ix)
+
+
+def test_shard_pack_balances_least_loaded():
+    """Equal-size graphs round-robin across shards instead of filling
+    shard 0 first."""
+    graphs = _graphs(8)
+    wave, k = P.shard_pack(graphs, 10_000, 10_000, 8, num_shards=4)
+    assert k == 8
+    per_shard = [len(ix) for ix in wave.index]
+    assert max(per_shard) - min(per_shard) <= 1, per_shard
+
+
+def test_shard_pack_empty_shard_keeps_shapes():
+    """More shards than graphs: idle shards carry the all-padding batch
+    with identical static shapes (every mesh device needs a block)."""
+    graphs = _graphs(2)
+    wave, k = P.shard_pack(graphs, 96, 192, 4, num_shards=4)
+    assert k == 2 and wave.num_shards == 4
+    empties = [s for s, ix in enumerate(wave.index) if not ix]
+    assert len(empties) == 2
+    ref = wave.shards[0]
+    for s in empties:
+        b = wave.shards[s]
+        assert int(b["num_graphs"]) == 0
+        assert not b["graph_valid"].any()
+        assert (b["node_graph_id"] == 4).all()
+        assert (b["edge_index"] == -1).all()
+        for key in ref:
+            assert b[key].shape == ref[key].shape, key
+
+
+def test_shard_pack_raises_on_oversize_first():
+    with pytest.raises(ValueError):
+        P.shard_pack(_graphs(3), node_budget=2, edge_budget=2,
+                     max_graphs=4, num_shards=2)
+    with pytest.raises(ValueError):
+        P.shard_pack(_graphs(3), 96, 192, 4, num_shards=0)
+
+
+def test_empty_graph_batch_matches_packed_layout():
+    b = P.empty_graph_batch(32, 48, 4, DS.node_feat_dim, DS.edge_feat_dim)
+    packed, _ = P.pack_graphs(_graphs(1), 32, 48, 4)
+    assert set(b) == set(packed)
+    for k in b:
+        assert b[k].shape == packed[k].shape, k
+        assert b[k].dtype == packed[k].dtype, k
+
+
+# ------------------------------------------- pack_dataset(num_shards=) --
+def test_pack_dataset_sharded_covers_stream_in_order():
+    graphs = _graphs(24)
+    waves, dropped = P.pack_dataset(graphs, 48, 96, 4, num_shards=2)
+    assert not dropped
+    assert all(isinstance(w, P.ShardedBatch) for w in waves)
+    total = sum(w.n_graphs for w in waves)
+    assert total == len(graphs)
+    # gather per wave, concatenate: ids visit the stream in order
+    pos = 0
+    for w in waves:
+        marks = np.zeros((w.n_graphs, 1), np.float32)
+        outs = np.zeros((w.num_shards, 4, 1), np.float32)
+        for s, ix in enumerate(w.index):
+            for j, p_ in enumerate(ix):
+                outs[s, j, 0] = pos + p_
+        marks = P.gather_shard_outputs(outs, w.index)
+        np.testing.assert_array_equal(
+            marks[:, 0], np.arange(pos, pos + w.n_graphs))
+        pos += w.n_graphs
+
+
+def test_pack_dataset_sharded_drops_only_oversize():
+    graphs = _graphs(6)
+    big = P.make_graph(P.GraphDataConfig(avg_nodes=40, max_nodes=64,
+                                         max_edges=64, node_feat_dim=7,
+                                         edge_feat_dim=3, seed=1), 0)
+    waves, dropped = P.pack_dataset(graphs[:3] + [big] + graphs[3:],
+                                    24, 96, 4, num_shards=2)
+    assert dropped == [big]
+    assert sum(w.n_graphs for w in waves) == 6
+
+
+def test_pack_dataset_single_shard_unchanged():
+    """num_shards=1 keeps the original (batches, dropped) contract."""
+    graphs = _graphs(8)
+    batches, dropped = P.pack_dataset(graphs, 96, 192, 4)
+    assert all(isinstance(b, dict) for b in batches)
+    assert sum(int(b["num_graphs"]) for b in batches) + len(dropped) \
+        == len(graphs)
+
+
+# ------------------------------------------------ gather host order -----
+def test_gather_shard_outputs_inverts_index():
+    outs = np.arange(2 * 3 * 2, dtype=np.float32).reshape(2, 3, 2)
+    index = [[0, 3], [1, 2]]            # shard 0 -> rows 0,3; shard 1 -> 1,2
+    host = P.gather_shard_outputs(outs, index)
+    np.testing.assert_array_equal(host[0], outs[0, 0])
+    np.testing.assert_array_equal(host[3], outs[0, 1])
+    np.testing.assert_array_equal(host[1], outs[1, 0])
+    np.testing.assert_array_equal(host[2], outs[1, 1])
+
+
+# ------------------------------------------------- DSE / feature axis ---
+def test_space_has_num_shards_and_features_roundtrip():
+    rng = np.random.default_rng(0)
+    assert 1 in dse.SPACE["num_shards"]
+    d = dse.sample_design(rng)
+    assert d["num_shards"] in dse.SPACE["num_shards"]
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    hot = [v[PM.FEATURE_NAMES.index(f"shards_{n}")] for n in (2, 4, 8)]
+    assert sum(hot) == (0.0 if d["num_shards"] == 1 else 1.0)
+    if d["num_shards"] > 1:
+        assert hot[(2, 4, 8).index(d["num_shards"])] == 1.0
+
+
+def test_legacy_design_featurizes_as_single_device():
+    """Databases recorded before the sharding axis still featurize:
+    num_shards defaults to 1 (zero one-hot)."""
+    rng = np.random.default_rng(1)
+    d = dse.sample_design(rng)
+    d.pop("num_shards", None)
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    for n in (2, 4, 8):
+        assert v[PM.FEATURE_NAMES.index(f"shards_{n}")] == 0.0
+
+
+# --------------------------------------- sharded parity (fake devices) --
+# The device count must be pinned before jax initializes, so the parity
+# grid runs in one subprocess over 2 simulated host devices: every conv,
+# every precision, both aggregation backends, plus an uneven wave (9
+# graphs over 2 shards) and a 4-shard wave with idle shards. Host order
+# is checked against the padded per-graph oracle.
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import gnn_model as G
+    from repro.data import pipeline as P
+    from repro.launch.mesh import make_data_mesh
+    from repro.nn import param as prm
+    from repro.core import aggregations as agg_mod
+
+    DS = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
+                           node_feat_dim=7, edge_feat_dim=3, seed=5)
+    graphs = [P.make_graph(DS, i) for i in range(9)]   # uneven over 2
+
+    def el(g):
+        return {"node_feat": jnp.asarray(g.node_feat),
+                "edge_index": jnp.asarray(g.edge_index),
+                "edge_feat": jnp.asarray(g.edge_feat),
+                "num_nodes": jnp.int32(g.num_nodes)}
+
+    mesh2 = make_data_mesh(2)
+    for conv in ("gcn", "sage", "gin", "pna"):
+        cfg = G.GNNModelConfig(
+            graph_input_feature_dim=7, graph_input_edge_dim=3,
+            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
+            gnn_conv=conv,
+            mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
+                                 hidden_layers=1))
+        params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+        wave, k = P.shard_pack(graphs, 96, 192, 8, num_shards=2)
+        assert k == len(graphs)
+        stacked = G.stack_shards(wave)
+        cal_batch, _ = P.pack_graphs(graphs, 192, 384, 16)
+        for precision in ("fp32", "bf16", "int8"):
+            policy = G.calibrated_policy(
+                params, cfg, G.packed_to_device(cal_batch), precision)
+            for backend in ("xla", "pallas"):
+                with agg_mod.backend_scope(backend, 32, 32):
+                    fn = G.make_sharded_apply(cfg, mesh2, None, policy)
+                    out = np.asarray(fn(params, stacked))
+                    single = jax.jit(lambda p, b: G.apply_packed(
+                        p, cfg, b, None, policy))
+                    for s, shard in enumerate(wave.shards):
+                        ref = np.asarray(single(
+                            params, G.packed_to_device(shard)))
+                        err = np.abs(out[s] - ref).max()
+                        assert err < 1e-5, (conv, precision, backend, err)
+        # host-order gather vs the padded per-graph oracle (fp32)
+        fn = G.make_sharded_apply(cfg, mesh2)
+        host = P.gather_shard_outputs(np.asarray(fn(params, stacked)),
+                                      wave.index)
+        oracle = jax.jit(lambda p, e: G.apply(p, cfg, e))
+        for i, g in enumerate(graphs):
+            ref = np.asarray(oracle(params, el(g)))
+            assert np.abs(host[i] - ref).max() < 1e-4, (conv, i)
+        # 4-shard wave with idle shards: one graph, three empty blocks
+        wave4, k4 = P.shard_pack(graphs[:1], 96, 192, 8, num_shards=4)
+        assert k4 == 1
+        out4 = np.asarray(G.apply_packed_sharded(
+            params, cfg, wave4, mesh=make_data_mesh(4)))
+        host4 = P.gather_shard_outputs(out4, wave4.index)
+        ref = np.asarray(oracle(params, el(graphs[0])))
+        assert np.abs(host4[0] - ref).max() < 1e-4, conv
+    print("SHARDED_PARITY_OK")
+""")
+
+
+def test_sharded_parity_grid_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "SHARDED_PARITY_OK" in out.stdout, out.stderr[-3000:]

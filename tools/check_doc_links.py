@@ -1,0 +1,84 @@
+"""Docs link check (the CI docs-job step).
+
+Three invariants keep the documentation front door honest:
+
+1. every relative markdown link in README.md, docs/*.md, and the
+   root-level design docs resolves to an existing file;
+2. every docs/*.md is reachable from README.md (no orphan pages);
+3. every docs/*.md links back to the README (the pages are a tree,
+   not a pile).
+
+External (http/https/mailto) links and intra-page anchors are out of
+scope — this guards the relative-path graph only, which is what rots
+when files move.
+
+  python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — excluding images handled identically, fine to include
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_links(path: str) -> list:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    out = []
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        out.append(target.split("#", 1)[0])
+    return out
+
+
+def main(root: str) -> int:
+    readme = os.path.join(root, "README.md")
+    docs_dir = os.path.join(root, "docs")
+    pages = [readme] + sorted(
+        os.path.join(root, n) for n in os.listdir(root)
+        if n.endswith(".md") and n != "README.md") + sorted(
+        os.path.join(docs_dir, n) for n in os.listdir(docs_dir)
+        if n.endswith(".md"))
+    errors = []
+
+    # 1. every relative link resolves
+    for page in pages:
+        for target in md_links(page):
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(page), target))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(page, root)}: dead link "
+                              f"-> {target}")
+
+    # 2. every docs/*.md is referenced from README.md
+    readme_targets = {os.path.normpath(os.path.join(root, t))
+                      for t in md_links(readme)}
+    for name in sorted(os.listdir(docs_dir)):
+        if not name.endswith(".md"):
+            continue
+        page = os.path.normpath(os.path.join(docs_dir, name))
+        if page not in readme_targets:
+            errors.append(f"docs/{name}: not linked from README.md")
+
+        # 3. ... and links back to the README
+        back = {os.path.normpath(os.path.join(docs_dir, t))
+                for t in md_links(page)}
+        if os.path.normpath(readme) not in back:
+            errors.append(f"docs/{name}: no link back to README.md")
+
+    for e in errors:
+        print(f"::error::{e}")
+    if not errors:
+        n_links = sum(len(md_links(p)) for p in pages)
+        print(f"doc link check OK: {len(pages)} pages, "
+              f"{n_links} relative links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else
+                  os.path.join(os.path.dirname(__file__), "..")))
