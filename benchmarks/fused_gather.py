@@ -1,27 +1,44 @@
-"""Fused gather->phi->aggregate vs the materialized-message path.
+"""Gather->phi->aggregate: v2 DMA kernel vs legacy one-hot vs XLA.
 
 Sweeps edge-stream size / feature width / average degree over packed
-QM9-like COO layouts and compares the fused Pallas kernel
-(`kernels/fused_gather_aggregate`) against the materialized baseline
-(gather the (E, F) message tensor with ``jnp.take``, then segment-reduce)
-on three axes:
+QM9-like COO layouts and compares three gather implementations:
 
-* numerics  — max abs diff (the parity pin, must stay < 1e-5),
-* bytes     — modeled HBM traffic of each path (the fused kernel never
-              writes/re-reads the (E, F) message tensor),
-* throughput — measured edges/s on this host, plus the modeled
-              bytes-over-bandwidth edges/s for the paper target
-              (TPUTarget.hbm_bw). On CPU CI the Pallas kernel runs in
-              interpret mode, so the *modeled* ratio is the acceptance
-              proxy; on a TPU the measured ratio is asserted instead.
+* materialized — gather the (E, F) message tensor with ``jnp.take``,
+  segment-reduce it (the XLA fallback path),
+* onehot       — the legacy fused Pallas kernel: dense (N, EB) one-hot
+  MXU contractions, O(N * EB * F) compute per edge block,
+* dma          — the v2 fused kernel: scalar-prefetched id streams,
+  per-edge dynamic-slice gather, double-buffered scale DMA,
+  O(EB * F) per edge block (docs/KERNELS.md §v2).
 
-  PYTHONPATH=src python benchmarks/fused_gather.py [--smoke]
+Each point reports numerics (max abs diff, the parity pin), measured
+edges/s on this host, and *modeled* edges/s from the honest roofline
+``max(bytes / hbm_bw, flops / peak_flops) + dispatch`` — the compute
+term is what the pre-v2 model omitted, letting the one-hot kernel "win"
+on modeled bytes while losing ~40x on the clock (the bug this tier
+fixes). On CPU CI the Pallas kernels run in interpret mode; interpret
+wall-clock still exposes the asymptotic gap (the one-hot kernel does
+O(N/NB) more work per edge), so the measured gates hold there too.
+
+  PYTHONPATH=src python benchmarks/fused_gather.py [--smoke] [--compiled]
       [--feat-dims 32 64 128] [--degrees 2 4] [--repeats 3]
 
 JSON lands in benchmarks/results/fused_gather.json; --smoke runs the
-QM9-like point only and enforces the acceptance gates (parity < 1e-5,
-fused modeled bytes < materialized, modeled edge-aggregation throughput
->= 1.2x).
+QM9-like default point (F=64, deg=2) only and enforces the acceptance
+gates:
+
+  1. parity         — every path within 1e-5 of the XLA baseline,
+  2. v2 vs legacy   — measured dma >= 5x onehot,
+  3. v2 vs XLA      — measured dma not slower than materialized at the
+                      default point,
+  4. model honesty  — modeled edges/s ranks dma > materialized > onehot,
+  5. sign match     — the measured ordering of the three paths agrees
+                      with the modeled ordering at the default point.
+
+--compiled additionally runs the dma kernel Mosaic-compiled
+(interpret=False). That lowering only exists on a real TPU backend;
+elsewhere the step is skipped with a documented log line (CI greps for
+it) rather than failing.
 """
 from __future__ import annotations
 
@@ -36,12 +53,16 @@ import numpy as np
 
 from repro.configs.gnn import DATASETS
 from repro.core.aggregations import gather_aggregate
+from repro.core.convs import gather_compute_flops
 from repro.core.project import TPUTarget
 from repro.data import pipeline as P
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 F32 = 4          # bytes per element
 I32 = 4
+PATHS = ("materialized", "onehot", "dma")
+COMPILED_SKIP_MSG = ("compiled run skipped: Mosaic lowering needs a TPU "
+                     "backend; interpret-mode results are the CI proxy")
 
 
 def _time(fn, *args, repeats: int = 3) -> float:
@@ -61,10 +82,12 @@ def modeled_bytes(e: int, n: int, f: int, node_block: int) -> dict:
     (E, F) message tensor, the segment reduce reads it back, and the
     (N, F) output is written once; id streams are read once.
 
-    fused: the (N, F) node table is read once (it stays resident in VMEM
+    onehot (legacy fused): the (N, F) node table is read once (resident
     across the sequential edge axis), the id/scale streams are re-swept
-    once per node tile, the output is written once — the (E, F) message
-    tensor never exists.
+    once per node tile, the output is written once.
+
+    dma (v2 fused): table once, output once, and the id/scale streams
+    exactly once — the grid has no node axis to re-sweep them over.
     """
     node_tiles = -(-n // node_block)
     materialized = (e * f * F32          # gather: read source rows
@@ -72,11 +95,48 @@ def modeled_bytes(e: int, n: int, f: int, node_block: int) -> dict:
                     + e * f * F32        # reduce: read messages back
                     + n * f * F32        # write aggregates
                     + 2 * e * I32)       # src + dst id streams
-    fused = (n * f * F32                 # node table, read once
-             + 3 * e * I32 * node_tiles  # src/dst/scale swept per tile
-             + n * f * F32)              # write aggregates
-    return {"materialized": materialized, "fused": fused,
-            "ratio": materialized / fused}
+    onehot = (n * f * F32                # node table, read once
+              + 3 * e * I32 * node_tiles  # src/dst/scale swept per tile
+              + n * f * F32)             # write aggregates
+    dma = (n * f * F32                   # node table, read once
+           + 3 * e * I32                 # src/dst/scale, single sweep
+           + n * f * F32)                # write aggregates
+    return {"materialized": materialized, "onehot": onehot, "dma": dma}
+
+
+def modeled_flops(e: int, n: int, f: int, node_block: int) -> dict:
+    """Gather-stage compute per path (convs.gather_compute_flops): the
+    materialized path's take/scale/segment-add has the same ~3 E F shape
+    as the dma kernel; the one-hot kernel's dense contractions grow with
+    N and dominate everything else at realistic node counts."""
+    return {"materialized": gather_compute_flops(n, e, f, "dma"),
+            "onehot": gather_compute_flops(n, e, f, "onehot", node_block),
+            "dma": gather_compute_flops(n, e, f, "dma")}
+
+
+def modeled_edges_per_s(e: int, n: int, f: int, edge_block: int,
+                        node_block: int,
+                        target: TPUTarget = TPUTarget()) -> dict:
+    """Honest per-path roofline: max(bytes-over-bandwidth,
+    FLOPs-over-peak) plus dispatch overhead. The one-hot kernel blocks
+    on every (node_tile, edge_tile) grid step; the dma kernel's
+    double-buffered scale copies overlap the edge-loop compute, so only
+    the single kernel launch pays (DESIGN_BATCHING.md §VMEM residency).
+    The materialized path is a short XLA kernel chain — two dispatches
+    (gather+scale, segment-reduce)."""
+    bytes_ = modeled_bytes(e, n, f, node_block)
+    flops = modeled_flops(e, n, f, node_block)
+    edge_tiles = -(-e // edge_block)
+    node_tiles = -(-n // node_block)
+    dispatch = {"materialized": 2, "onehot": edge_tiles * node_tiles,
+                "dma": 1}
+    out = {}
+    for p in PATHS:
+        t = max(bytes_[p] / target.hbm_bw, flops[p] / target.peak_flops) \
+            + dispatch[p] * target.kernel_step_overhead
+        out[p] = e / t
+    out["time_s"] = {p: e / out[p] for p in PATHS}
+    return out
 
 
 def _edge_stream(n: int, e: int, f: int, seed: int):
@@ -104,37 +164,59 @@ def run_point(n: int, e: int, f: int, *, agg: str = "sum",
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
 
-    mat = jax.jit(lambda *a: gather_aggregate(
-        agg, *a, backend="xla"), static_argnums=(3,))
-    fused = jax.jit(lambda *a: gather_aggregate(
-        agg, *a, backend="pallas", edge_block=edge_block,
-        node_block=node_block, interpret=not on_tpu), static_argnums=(3,))
+    def make(backend, gather_mode=None):
+        return jax.jit(lambda *a: gather_aggregate(
+            agg, *a, backend=backend, edge_block=edge_block,
+            node_block=node_block, interpret=not on_tpu,
+            gather_mode=gather_mode), static_argnums=(3,))
+
+    fns = {"materialized": make("xla"),
+           "onehot": make("pallas", "onehot"),
+           "dma": make("pallas", "dma")}
     args = (x, src, dst, n, valid, scale)
-    mat_s = _time(mat, *args, repeats=repeats)
-    fused_s = _time(fused, *args, repeats=repeats)
-    diff = float(np.max(np.abs(np.asarray(fused(*args))
-                               - np.asarray(mat(*args)))))
-    bw = TPUTarget().hbm_bw
-    bytes_ = modeled_bytes(e, n, f, node_block)
+    times = {p: _time(fns[p], *args, repeats=repeats) for p in PATHS}
+    base = np.asarray(fns["materialized"](*args))
+    diffs = {p: float(np.max(np.abs(np.asarray(fns[p](*args)) - base)))
+             for p in ("onehot", "dma")}
+    modeled = modeled_edges_per_s(e, n, f, edge_block, node_block)
     return {
         "num_nodes": n, "num_edges": e, "feat_dim": f, "agg": agg,
         "with_scale": bool(with_scale), "edge_block": edge_block,
-        "node_block": node_block, "max_abs_diff": diff,
-        "materialized_s": mat_s, "fused_s": fused_s,
-        "measured_edges_per_s": {"materialized": e / mat_s,
-                                 "fused": e / fused_s,
-                                 "speedup": mat_s / fused_s},
-        "modeled_bytes": bytes_,
-        "modeled_edges_per_s": {
-            "materialized": e / (bytes_["materialized"] / bw),
-            "fused": e / (bytes_["fused"] / bw),
-            "speedup": bytes_["ratio"]},
-        "fused_mode": "compiled" if on_tpu else "interpret",
+        "node_block": node_block, "max_abs_diff": diffs,
+        "seconds": times,
+        "measured_edges_per_s": {p: e / times[p] for p in PATHS},
+        "measured_speedup": {
+            "dma_vs_onehot": times["onehot"] / times["dma"],
+            "dma_vs_materialized": times["materialized"] / times["dma"]},
+        "modeled_bytes": modeled_bytes(e, n, f, node_block),
+        "modeled_flops": modeled_flops(e, n, f, node_block),
+        "modeled_edges_per_s": {p: modeled[p] for p in PATHS},
+        "pallas_mode": "compiled" if on_tpu else "interpret",
     }
 
 
+def run_compiled_point(n: int, e: int, f: int, *, agg: str = "sum",
+                       repeats: int = 3, seed: int = 0, log=print):
+    """TPU-only: run the dma kernel Mosaic-compiled (interpret=False)
+    and report measured edges/s. Returns None with the documented skip
+    line anywhere Mosaic cannot lower (CPU/GPU CI)."""
+    if jax.default_backend() != "tpu":
+        if log:
+            log(COMPILED_SKIP_MSG)
+        return None
+    x, src, dst, scale = _edge_stream(n, e, f, seed)
+    fn = jax.jit(lambda *a: gather_aggregate(
+        agg, *a, backend="pallas", interpret=False, gather_mode="dma"),
+        static_argnums=(3,))
+    args = (x, src, dst, n, src >= 0, scale)
+    t = _time(fn, *args, repeats=repeats)
+    return {"num_nodes": n, "num_edges": e, "feat_dim": f, "agg": agg,
+            "seconds": t, "edges_per_s": e / t, "pallas_mode": "compiled"}
+
+
 def run(feat_dims=(32, 64, 128), degrees=(2, 4), batch_graphs: int = 32,
-        repeats: int = 3, smoke: bool = False, log=print) -> dict:
+        repeats: int = 3, smoke: bool = False, compiled: bool = False,
+        log=print) -> dict:
     ds = DATASETS["qm9"]
     node_budget = P.size_budget(batch_graphs, ds.avg_nodes)
     res = {"dataset": "qm9", "batch_graphs": batch_graphs,
@@ -151,12 +233,20 @@ def run(feat_dims=(32, 64, 128), degrees=(2, 4), batch_graphs: int = 32,
                 pt["avg_degree"] = deg
                 res["points"].append(pt)
                 if log:
+                    sp = pt["measured_speedup"]
                     log(f"E={pt['num_edges']:5d} F={f:3d} deg={deg} "
-                        f"{agg:>4}: diff {pt['max_abs_diff']:.1e} | "
-                        f"modeled bytes {pt['modeled_bytes']['ratio']:.2f}x"
-                        f" | measured "
-                        f"{pt['measured_edges_per_s']['speedup']:.2f}x "
-                        f"({pt['fused_mode']})")
+                        f"{agg:>4}: diff {max(pt['max_abs_diff'].values()):.1e}"
+                        f" | dma {sp['dma_vs_onehot']:7.1f}x onehot, "
+                        f"{sp['dma_vs_materialized']:5.2f}x xla "
+                        f"({pt['pallas_mode']})")
+    if compiled:
+        cpt = run_compiled_point(node_budget,
+                                 P.size_budget(batch_graphs,
+                                               ds.avg_nodes * 2), 64,
+                                 repeats=repeats, log=log)
+        res["compiled_point"] = cpt
+        if cpt and log:
+            log(f"compiled dma: {cpt['edges_per_s']:.3g} edges/s")
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "fused_gather.json"), "w") as fh:
         json.dump(res, fh, indent=1)
@@ -164,24 +254,31 @@ def run(feat_dims=(32, 64, 128), degrees=(2, 4), batch_graphs: int = 32,
 
 
 def check_acceptance(res: dict):
-    """Parity must hold everywhere; the fused path must beat the
-    materialized path on modeled bytes and >= 1.2x modeled (or, on TPU,
-    measured) edge-aggregation throughput."""
-    on_tpu = res["jax_backend"] == "tpu"
+    """The five --smoke gates (module docstring): parity, dma >= 5x
+    onehot measured, dma >= 1x materialized measured at the default
+    point, modeled ranking dma > materialized > onehot, and
+    modeled-vs-measured ordering agreement at the default point."""
     for pt in res["points"]:
-        assert pt["max_abs_diff"] < 1e-5, pt
-        assert pt["modeled_bytes"]["fused"] \
-            < pt["modeled_bytes"]["materialized"], pt
-        speedup = pt["measured_edges_per_s"]["speedup"] if on_tpu \
-            else pt["modeled_edges_per_s"]["speedup"]
-        assert speedup >= 1.2, (pt, speedup)
+        for p, d in pt["max_abs_diff"].items():
+            assert d < 1e-5, (pt["agg"], p, d)
+        assert pt["measured_speedup"]["dma_vs_onehot"] >= 5.0, pt
+        m = pt["modeled_edges_per_s"]
+        assert m["dma"] > m["materialized"] > m["onehot"], m
+        if pt["feat_dim"] == 64 and pt["avg_degree"] == 2:
+            assert pt["measured_speedup"]["dma_vs_materialized"] >= 1.0, pt
+            meas = pt["measured_edges_per_s"]
+            rank = sorted(PATHS, key=lambda p: m[p])
+            assert rank == sorted(PATHS, key=lambda p: meas[p]), \
+                (rank, meas)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="single QM9-like point + acceptance gates "
-                         "(parity, bytes, >=1.2x modeled throughput)")
+                    help="default QM9-like point only + acceptance gates")
+    ap.add_argument("--compiled", action="store_true",
+                    help="also run the dma kernel Mosaic-compiled "
+                         "(TPU only; documented skip elsewhere)")
     ap.add_argument("--feat-dims", type=int, nargs="+",
                     default=[32, 64, 128])
     ap.add_argument("--degrees", type=int, nargs="+", default=[2, 4])
@@ -189,8 +286,11 @@ if __name__ == "__main__":
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
     res = run(tuple(args.feat_dims), tuple(args.degrees),
-              args.batch_graphs, args.repeats, smoke=args.smoke)
+              args.batch_graphs, args.repeats, smoke=args.smoke,
+              compiled=args.compiled)
     check_acceptance(res)
     print(f"wrote {os.path.join(RESULTS, 'fused_gather.json')} "
           f"({res['jax_backend']} backend) — acceptance OK "
-          "(parity < 1e-5, fused wins modeled bytes, >= 1.2x throughput)")
+          "(parity < 1e-5, dma >= 5x onehot, dma >= 1x materialized at "
+          "the default point, modeled ranking dma > materialized > "
+          "onehot, measured ordering agrees)")

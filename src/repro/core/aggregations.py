@@ -49,6 +49,12 @@ AGGREGATIONS = ("sum", "mean", "min", "max", "var", "std")
 
 SEGMENT_BACKENDS = ("xla", "pallas")
 
+# gather-stage kernel generations for ``gather_aggregate``'s Pallas path
+# (dse.SPACE gather_mode): "dma" = the one-hot-free v2 kernel
+# (scalar-prefetched ids + dynamic-slice gather), "onehot" = the legacy
+# (N, EB) one-hot MXU contraction (docs/KERNELS.md)
+GATHER_MODES = ("onehot", "dma")
+
 # Process-wide defaults for ``segment_aggregate``'s backend=/tile
 # arguments. "xla" everywhere a program may run under pjit; serving flips
 # to "pallas" on single-device hosts (launch/serve.py --agg-backend).
@@ -56,6 +62,7 @@ SEGMENT_BACKENDS = ("xla", "pallas")
 _DEFAULT_BACKEND = "xla"
 _DEFAULT_EDGE_BLOCK = 128
 _DEFAULT_NODE_BLOCK = 128
+_DEFAULT_GATHER_MODE = "dma"
 # None = auto: interpret the Pallas kernel everywhere except a real TPU
 # backend (Mosaic compiles only there; interpret mode is the CPU/CI path)
 _DEFAULT_INTERPRET: bool | None = None
@@ -71,16 +78,21 @@ def _resolve_interpret(interpret: bool | None) -> bool:
 
 def set_default_backend(backend: str, edge_block: int | None = None,
                         node_block: int | None = None,
-                        interpret: bool | None = None) -> str:
+                        interpret: bool | None = None,
+                        gather_mode: str | None = None) -> str:
     """Set the process default segment-aggregation backend (and
-    optionally the Pallas tile sizes / interpret mode); returns the
-    previous backend so callers can restore it. Trace-time effective:
-    jitted programs bake in whichever defaults were set when first
-    traced."""
+    optionally the Pallas tile sizes / interpret mode / gather kernel
+    generation); returns the previous backend so callers can restore it.
+    Trace-time effective: jitted programs bake in whichever defaults
+    were set when first traced."""
     global _DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK, \
-        _DEFAULT_INTERPRET
+        _DEFAULT_INTERPRET, _DEFAULT_GATHER_MODE
+    # validate everything before mutating anything: a rejected call must
+    # leave the process defaults untouched (no half-applied state)
     if backend not in SEGMENT_BACKENDS:
         raise ValueError(backend)
+    if gather_mode is not None and gather_mode not in GATHER_MODES:
+        raise ValueError(gather_mode)
     prev = _DEFAULT_BACKEND
     _DEFAULT_BACKEND = backend
     if edge_block is not None:
@@ -89,6 +101,8 @@ def set_default_backend(backend: str, edge_block: int | None = None,
         _DEFAULT_NODE_BLOCK = int(node_block)
     if interpret is not None:
         _DEFAULT_INTERPRET = bool(interpret)
+    if gather_mode is not None:
+        _DEFAULT_GATHER_MODE = gather_mode
     return prev
 
 
@@ -99,20 +113,22 @@ def default_backend() -> str:
 @contextlib.contextmanager
 def backend_scope(backend: str, edge_block: int | None = None,
                   node_block: int | None = None,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  gather_mode: str | None = None):
     """Temporarily override the segment-aggregation defaults. Wrap the
     *tracing* of a jitted program (e.g. Project.gen_hw_model's infer fns)
     to bake a backend + tile choice into that program only."""
     global _DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK, \
-        _DEFAULT_INTERPRET
+        _DEFAULT_INTERPRET, _DEFAULT_GATHER_MODE
     prev = (_DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK,
-            _DEFAULT_INTERPRET)
+            _DEFAULT_INTERPRET, _DEFAULT_GATHER_MODE)
     try:
-        set_default_backend(backend, edge_block, node_block, interpret)
+        set_default_backend(backend, edge_block, node_block, interpret,
+                            gather_mode)
         yield
     finally:
         (_DEFAULT_BACKEND, _DEFAULT_EDGE_BLOCK, _DEFAULT_NODE_BLOCK,
-         _DEFAULT_INTERPRET) = prev
+         _DEFAULT_INTERPRET, _DEFAULT_GATHER_MODE) = prev
 
 
 # ------------------------------------------------------- streaming form --
@@ -273,7 +289,7 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
                      edge_block: int | None = None,
                      node_block: int | None = None,
                      interpret: bool | None = None,
-                     precision=None):
+                     precision=None, gather_mode: str | None = None):
     """Fused gather -> phi -> aggregate over packed COO id streams.
 
     x: (N, F) node features; src/dst: (E,) int32 endpoint ids (padding:
@@ -287,6 +303,12 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
     gather + the Pallas segment kernel. "xla" always materializes
     ``jnp.take(x, src)`` and segment-reduces it — the materialized
     baseline the fused kernel is numerics-pinned against.
+
+    gather_mode=None uses the process default ("dma"): the one-hot-free
+    v2 kernel — scalar-prefetched id streams, per-edge dynamic-slice
+    gather, double-buffered scale copies. "onehot" keeps the legacy
+    (N, EB) one-hot MXU contraction (GATHER_MODES; the DSE featurizes
+    the choice).
 
     precision (a ``quantization.LayerPrecision``) sets the storage width
     of the node table: bf16 tiles, or — on the fused Pallas path — true
@@ -314,7 +336,8 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
             x, src, dst, valid, scale, num_segments=num_segments, agg=agg,
             edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
             node_block=node_block or _DEFAULT_NODE_BLOCK,
-            interpret=_resolve_interpret(interpret))
+            interpret=_resolve_interpret(interpret),
+            gather_mode=gather_mode or _DEFAULT_GATHER_MODE)
     if lp is not None and lp.compute == "int8":
         from repro.core import quantization as Q
         x = Q.quantize(x, lp.act_fpx)                 # fake-quant mirror

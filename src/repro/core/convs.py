@@ -57,6 +57,16 @@ DATAFLOWS = ("auto", "aggregate_first", "transform_first")
 # transform, so the planner may reorder them. GIN's gamma-MLP runs after
 # the sum either way and PNA's phi is a per-edge MLP — no freedom there.
 REORDERABLE_CONVS = ("gcn", "sage")
+# convs the multi-layer VMEM-residency kernel can execute (linear phi +
+# a single scalar per edge); must stay in sync with
+# kernels.fused_gather_aggregate.residency.RESIDENT_KINDS
+RESIDENT_CONVS = ("gcn", "sage")
+
+# word-equivalence factor between the two cost-model currencies: at the
+# TPUTarget roofline (819 GB/s HBM, 197 TFLOP/s) one fp32 word moved
+# costs the same time as ~480 MACs, so compute terms divide by this to
+# land in the same per-node units as the streaming term
+_MACS_PER_WORD = 480.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,8 +88,35 @@ class ConvConfig:
     precision: LayerPrecision = LayerPrecision()
 
 
+def gather_compute_flops(num_nodes: int, num_edges: int, feat_dim: int,
+                         gather_mode: str = "dma",
+                         node_block: int = 128) -> float:
+    """Modeled FLOPs the gather+aggregate stage itself spends on one
+    layer's edge sweep — the term the pre-v2 cost model omitted (it
+    counted bytes only, which made the legacy one-hot kernel "win" on
+    paper while losing 40x on the clock).
+
+    "onehot": every (node_tile, edge_tile) grid step builds and
+    contracts dense one-hots — ``2 * EB * F * (N + NB)`` MACs-as-FLOPs
+    per step — so the sweep costs
+    ``2 * E * F * (N + node_block) * ceil(N / node_block)``; at realistic
+    N this is compute-bound by orders of magnitude. "dma" gathers each
+    row by dynamic slice: ~3 FLOPs per message element (scale multiply +
+    accumulate + count), linear in ``E * F``. The materialized XLA path
+    has the same ~3 E F compute shape; it pays in message-tensor HBM
+    bytes instead (see benchmarks/fused_gather.py)."""
+    if gather_mode == "onehot":
+        node_tiles = -(-num_nodes // node_block)
+        return 2.0 * num_edges * feat_dim * (num_nodes + node_block) \
+            * node_tiles
+    if gather_mode == "dma":
+        return 3.0 * num_edges * feat_dim
+    raise ValueError(gather_mode)
+
+
 def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
-                  msg_bytes: float = 4.0) -> dict:
+                  msg_bytes: float = 4.0, gather_mode: str = "dma",
+                  num_nodes: int = 1024, node_block: int = 128) -> dict:
     """Per-node cost (fp32-word-equivalents moved through the edge
     pipeline + MACs/F) of each ordering. The W matmul costs
     ``in_dim * out_dim`` MACs per node either way; the edge stream
@@ -89,9 +126,18 @@ def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
     width, 4 = fp32) scales the streaming term, so low-precision layers
     shrink exactly what the reordering optimizes. The degree scales how
     much the reordering matters; the sign of the difference is
-    ``out_dim - in_dim``."""
+    ``out_dim - in_dim``.
+
+    The gather stage's own compute (``gather_compute_flops``) rides on
+    the same per-message-element axis, converted to word-equivalents via
+    the roofline ratio ``_MACS_PER_WORD``: negligible for "dma"
+    (~0.003 words/element — the v2 kernel is bandwidth-bound), dominant
+    for "onehot" (its dense contractions grow with ``num_nodes``), so
+    ordering decisions stay honest under either kernel generation."""
     matmul = in_dim * out_dim
-    stream = avg_degree * (msg_bytes / 4.0)
+    gflops = gather_compute_flops(num_nodes, avg_degree, 1.0,
+                                  gather_mode, node_block)
+    stream = avg_degree * (msg_bytes / 4.0) + gflops / 2.0 / _MACS_PER_WORD
     return {"aggregate_first": stream * in_dim + matmul,
             "transform_first": stream * out_dim + matmul}
 
@@ -109,6 +155,67 @@ def resolve_dataflow(cfg: ConvConfig) -> str:
     return "transform_first" \
         if cost["transform_first"] < cost["aggregate_first"] \
         else "aggregate_first"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPlan:
+    """Planner verdict for the multi-layer VMEM-resident conv stack
+    (kernels.fused_gather_aggregate.residency): whether keeping the node
+    table on-chip across ``depth`` consecutive layers fits the VMEM
+    budget, and the footprint arithmetic behind the decision. Recorded
+    verbatim in Project config.json so a generated accelerator documents
+    why residency did (not) engage."""
+    legal: bool
+    depth: int            # layers fused per kernel launch (min(req, L))
+    fmax: int             # padded table width (lane-aligned max dim)
+    vmem_required: int    # bytes at the widest point of the fused group
+    vmem_budget: int      # bytes the planner allows (frac * target VMEM)
+    reason: str
+
+
+def residency_plan(layer_dims, node_budget: int, conv: str,
+                   fusion_depth: int, *, quantized: bool = False,
+                   edge_block: int = 128, vmem_bytes: int | None = None,
+                   vmem_frac: float = 0.75) -> ResidencyPlan:
+    """VMEM-budget rule deciding when multi-layer residency is legal.
+
+    layer_dims: [(in_dim, out_dim), ...] for the conv stack;
+    node_budget: packed-batch node-table rows; quantized: a non-fp32
+    policy adds the quantized shadow table. The resident working set at
+    the widest point is the fp32 table, the input block, the aggregate
+    accumulator (and the shadow when quantized) — each
+    ``node_budget * fmax * 4`` bytes with ``fmax`` the lane-aligned max
+    layer width — plus the mean-count column and the double-buffered
+    per-layer weight/scale blocks. Legal only for ``RESIDENT_CONVS``
+    (linear phi, one scalar per edge) at ``fusion_depth > 1``, and only
+    when the working set fits ``vmem_frac`` of the target's VMEM
+    (default ``core.project.TPUTarget.vmem_bytes``) — the remaining
+    fraction is headroom for Mosaic's own spills."""
+    if vmem_bytes is None:
+        from repro.core.project import TPUTarget
+        vmem_bytes = int(TPUTarget().vmem_bytes)
+    budget = int(vmem_bytes * vmem_frac)
+    depth = max(1, min(int(fusion_depth), len(layer_dims)))
+    fmax = max(max(d) for d in layer_dims)
+    fmax = -(-fmax // 128) * 128
+    tables = 3 + (1 if quantized else 0)       # x0, xout, aggr[, xq]
+    required = (tables * node_budget * fmax * 4
+                + node_budget * 4               # mean count column
+                + 2 * node_budget * 4           # self-scale + node mask
+                + 2 * (3 * fmax * fmax + fmax + 128) * 4  # dbl-buf weights
+                + 2 * edge_block * 4)           # dbl-buf edge scales
+    if conv not in RESIDENT_CONVS:
+        return ResidencyPlan(False, depth, fmax, required, budget,
+                             f"conv {conv!r} not in {RESIDENT_CONVS}")
+    if depth < 2:
+        return ResidencyPlan(False, depth, fmax, required, budget,
+                             "fusion_depth < 2: nothing to keep resident")
+    if required > budget:
+        return ResidencyPlan(False, depth, fmax, required, budget,
+                             f"working set {required} B exceeds "
+                             f"{budget} B VMEM budget")
+    return ResidencyPlan(True, depth, fmax, required, budget,
+                         f"{required} B fits {budget} B VMEM budget")
 
 
 def _gather(x, idx):

@@ -62,6 +62,13 @@ SPACE = {
     # its own GraphBatch; the budgets above stay per-shard, throughput
     # scales near-linearly (perf_model shards_* one-hot)
     "num_shards": [1, 2, 4, 8],
+    # gather kernel generation (aggregations.GATHER_MODES): "dma" is the
+    # one-hot-free v2 kernel, "onehot" the legacy dense contraction kept
+    # searchable so the fitted models can price the difference
+    "gather_mode": ["onehot", "dma"],
+    # layers fused per launch by the VMEM-residency kernel (>1 engages
+    # apply_packed_resident when convs.residency_plan allows it)
+    "fusion_depth": [1, 2, 4],
 }
 
 
@@ -137,7 +144,9 @@ def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
         node_budget=d.get("node_budget"), edge_budget=d.get("edge_budget"),
         edge_block=d.get("edge_block", 128),
         node_block=d.get("node_block", 128),
-        num_shards=d.get("num_shards", 1))
+        num_shards=d.get("num_shards", 1),
+        gather_mode=d.get("gather_mode", "dma"),
+        fusion_depth=d.get("fusion_depth", 1))
     proj.gen_hw_model()
     report = proj.run_synthesis()
     out = dict(d)

@@ -307,6 +307,124 @@ def apply_packed(params, cfg: GNNModelConfig, batch: dict,
     return out
 
 
+def _qp_row(lp: Q.LayerPrecision | None):
+    """Per-layer precision row [mode, scale, lo, hi] the residency
+    kernel's dynamic cast consumes (residency._cast_dyn) — the exact
+    parameters of ``LayerPrecision.cast_activation`` for this layer."""
+    if lp is None or lp.compute == "fp32":
+        return [0.0, 1.0, 0.0, 0.0]
+    if lp.compute == "bf16":
+        return [1.0, 1.0, 0.0, 0.0]
+    fpx = lp.in_fpx or lp.act_fpx
+    return [2.0, fpx.resolution, fpx.min_val, fpx.max_val]
+
+
+def _pad2(w, fmax):
+    return jnp.zeros((fmax, fmax), jnp.float32).at[
+        :w.shape[0], :w.shape[1]].set(w.astype(jnp.float32))
+
+
+def apply_packed_resident(params, cfg: GNNModelConfig, batch: dict,
+                          quant: Q.FPX | None = None, policy=None, *,
+                          fusion_depth: int = 2,
+                          edge_block: int | None = None,
+                          interpret: bool | None = None,
+                          vmem_bytes: int | None = None):
+    """``apply_packed`` with the conv stack executed by the multi-layer
+    VMEM-residency kernel: consecutive layers fuse into single kernel
+    launches (groups of ``fusion_depth``), the node table staying
+    on-chip across layer boundaries instead of round-tripping HBM per
+    layer (kernels/fused_gather_aggregate/residency.py).
+
+    Falls back to ``apply_packed`` — bit-identically, since that *is*
+    the fallback call — whenever the ``convs.residency_plan`` VMEM
+    budget rule says residency is illegal (non-linear-phi conv,
+    fusion_depth < 2, working set over budget) or the legacy ``quant``
+    testbench hook is set. The resident path always aggregates first at
+    the padded table width: exact for fp32 (linearity), within the
+    layer dtype's rounding tolerance for bf16/int8 policies (the
+    per-layer PrecisionPolicy is emulated in-kernel via dynamic qp rows;
+    see docs/KERNELS.md §Residency). Pooling + MLP head run unchanged.
+    """
+    from repro.core import aggregations as agg_mod
+    from repro.kernels.fused_gather_aggregate.residency import (
+        fused_layer_stack_pallas)
+
+    pol = resolve_policy(cfg, policy)
+    pol = None if pol.is_fp32 else pol
+    nl = cfg.gnn_num_layers
+    ccs = [cfg.conv_cfg(i) for i in range(nl)]
+    eb = edge_block or agg_mod._DEFAULT_EDGE_BLOCK
+    g, x, node_mask, graph_id = packed_inputs(batch)
+    n = x.shape[0]
+    plan = C.residency_plan([(c.in_dim, c.out_dim) for c in ccs], n,
+                            cfg.gnn_conv, fusion_depth,
+                            quantized=pol is not None, edge_block=eb,
+                            vmem_bytes=vmem_bytes)
+    if quant is not None or not plan.legal:
+        return apply_packed(params, cfg, batch, quant, policy)
+
+    fmax = plan.fmax
+    src, dst = g["edge_index"][:, 0], g["edge_index"][:, 1]
+    if cfg.gnn_conv == "gcn":
+        scale = g["gcn_edge_scale"]
+        self_vec = g["gcn_self_scale"]
+    else:                                        # sage
+        scale = g["valid_e"].astype(jnp.float32)
+        self_vec = jnp.zeros((n,), jnp.float32)
+    xpad = jnp.zeros((n, fmax), jnp.float32).at[:, :x.shape[1]].set(
+        x.astype(jnp.float32))
+
+    for i0 in range(0, nl, plan.depth):
+        layers = range(i0, min(i0 + plan.depth, nl))
+        wa, wn, wsk, bias, qps = [], [], [], [], []
+        for i in layers:
+            p_i = params["convs"][f"c{i}"]
+            lp = pol.layer(i) if pol is not None else None
+            if lp is not None and lp.compute != "fp32":
+                p_i = lp.cast_params(p_i)
+            qps.append(_qp_row(lp))
+            if cfg.gnn_conv == "gcn":
+                wa.append(jnp.zeros((fmax, fmax), jnp.float32))
+                wn.append(_pad2(p_i["w"]["w"], fmax))
+                b_i = p_i["w"]["b"]
+            else:
+                wa.append(_pad2(p_i["w_self"]["w"], fmax))
+                wn.append(_pad2(p_i["w_neigh"]["w"], fmax))
+                b_i = p_i["w_self"]["b"]
+            bias.append(jnp.zeros((fmax,), jnp.float32).at[
+                :b_i.shape[0]].set(b_i.astype(jnp.float32)))
+            if not cfg.gnn_skip_connection:
+                wsk.append(jnp.zeros((fmax, fmax), jnp.float32))
+            elif f"skip{i}" in params:
+                # projection skips stay fp32 (the residual-stream rule)
+                wsk.append(_pad2(params[f"skip{i}"]["w"], fmax))
+            else:
+                wsk.append(_pad2(jnp.eye(ccs[i].in_dim), fmax))
+        xpad = fused_layer_stack_pallas(
+            xpad, src, dst, scale, self_vec,
+            node_mask.astype(jnp.float32),
+            jnp.stack(wa), jnp.stack(wn), jnp.stack(wsk),
+            jnp.stack(bias), jnp.asarray(qps, jnp.float32),
+            kind=cfg.gnn_conv, activation=cfg.gnn_activation,
+            edge_block=eb,
+            interpret=agg_mod._resolve_interpret(interpret),
+            has_skip=cfg.gnn_skip_connection,
+            quantized=pol is not None)
+
+    x = xpad[:, :ccs[-1].out_dim]
+    if cfg.task == "node":
+        return x
+    num_graphs = batch["graph_valid"].shape[0]
+    pooled = segment_global_pooling(cfg.global_pooling, x, graph_id,
+                                    num_graphs, node_mask)
+    out = mlp_head_apply(params["mlp"], pooled, cfg.mlp_head, None,
+                         pol.head if pol is not None else None)
+    if cfg.output_activation:
+        out = act(cfg.output_activation)(out)
+    return out
+
+
 def stack_shards(shards) -> dict:
     """Host ShardedBatch shards -> one stacked device-ready dict with a
     leading shard dim (num_shards, ...), stripping the host-only ``y``

@@ -183,6 +183,12 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     # buffers on every device — so the one-hot alone carries the
     # wave-throughput scaling signal
     "shards_2", "shards_4", "shards_8",
+    # gather kernel generation + multi-layer VMEM residency: "dma" (the
+    # one-hot-free v2 kernel) vs the legacy one-hot contraction, and the
+    # layer-fusion depth of the resident conv stack. Legacy databases
+    # predate both knobs and default to (onehot, depth 1) — exactly what
+    # they executed with
+    "gather_dma", "fusion_depth",
 ]
 
 
@@ -231,4 +237,6 @@ def features(design: dict) -> np.ndarray:
         1.0 if design.get("num_shards", 1) == 2 else 0.0,
         1.0 if design.get("num_shards", 1) == 4 else 0.0,
         1.0 if design.get("num_shards", 1) == 8 else 0.0,
+        1.0 if design.get("gather_mode", "onehot") == "dma" else 0.0,
+        float(design.get("fusion_depth", 1)),
     ], dtype=float)

@@ -67,7 +67,8 @@ class Project:
                  edge_budget: int | None = None,
                  edge_block: int = 128, node_block: int = 128,
                  agg_backend: str = "xla", dataflow: str | None = None,
-                 precision=None, num_shards: int = 1):
+                 precision=None, num_shards: int = 1,
+                 gather_mode: str = "dma", fusion_depth: int = 1):
         self.name = name
         # dataflow override + dataset degree flow into the per-layer
         # transform/aggregate planner (convs.resolve_dataflow);
@@ -111,6 +112,22 @@ class Project:
         self.edge_block = edge_block
         self.node_block = node_block
         self.agg_backend = agg_backend
+        # gather kernel generation (aggregations.GATHER_MODES): "dma" =
+        # the one-hot-free v2 kernel, "onehot" = the legacy contraction
+        from repro.core.aggregations import GATHER_MODES
+        if gather_mode not in GATHER_MODES:
+            raise ValueError(f"gather_mode must be one of {GATHER_MODES}, "
+                             f"got {gather_mode!r}")
+        self.gather_mode = gather_mode
+        # multi-layer VMEM residency: fusion_depth > 1 asks for the
+        # resident conv stack; convs.residency_plan decides legality
+        # against the target's VMEM at gen_hw_model time
+        if fusion_depth < 1:
+            raise ValueError(f"fusion_depth must be >= 1, "
+                             f"got {fusion_depth}")
+        self.fusion_depth = fusion_depth
+        self.residency = None        # ResidencyPlan, set by gen_hw_model
+        self.residency_engaged = False
         # data-parallel sharding: >1 splits each testbench/serving wave
         # into per-device packed shards over a ("data",) mesh, the
         # budgets above staying *per-shard* (graph-level partitioning —
@@ -145,15 +162,35 @@ class Project:
             def fn(params, batch):
                 from repro.core import aggregations as agg_mod
                 with agg_mod.backend_scope(backend, self.edge_block,
-                                           self.node_block):
+                                           self.node_block,
+                                           gather_mode=self.gather_mode):
                     return apply_fn(params, batch)
             return fn
 
         policy = self.policy
+        # multi-layer VMEM residency: the planner's budget rule decides
+        # legality; the resident program additionally requires the Pallas
+        # backend (it IS a Pallas kernel) and no legacy quant hook
+        self.residency = Cv.residency_plan(
+            [(cfg.conv_cfg(i).in_dim, cfg.conv_cfg(i).out_dim)
+             for i in range(cfg.gnn_num_layers)],
+            self.node_budget, cfg.gnn_conv, self.fusion_depth,
+            quantized=not policy.is_fp32, edge_block=self.edge_block,
+            vmem_bytes=int(self.target.vmem_bytes))
+        resident = (self.residency.legal and self.fusion_depth > 1
+                    and backend == "pallas" and quant is None)
+        self.residency_engaged = resident
         self._fn = jax.jit(with_backend(
             lambda p, el: G.apply(p, cfg, el, quant, policy)))
-        self._fn_packed = jax.jit(with_backend(
-            lambda p, b: G.apply_packed(p, cfg, b, quant, policy)))
+        if resident:
+            depth = self.residency.depth
+            self._fn_packed = jax.jit(with_backend(
+                lambda p, b: G.apply_packed_resident(
+                    p, cfg, b, quant, policy, fusion_depth=depth,
+                    edge_block=self.edge_block)))
+        else:
+            self._fn_packed = jax.jit(with_backend(
+                lambda p, b: G.apply_packed(p, cfg, b, quant, policy)))
         with open(os.path.join(self.build_dir, "config.json"), "w") as f:
             json.dump({"name": self.name,
                        "model": dataclasses.asdict(cfg),
@@ -170,6 +207,13 @@ class Project:
                        "edge_block": self.edge_block,
                        "node_block": self.node_block,
                        "agg_backend": self.agg_backend,
+                       "gather_mode": self.gather_mode,
+                       "fusion_depth": self.fusion_depth,
+                       # the planner's verdict + whether the resident
+                       # packed program actually engaged (it also needs
+                       # the pallas backend and no legacy quant hook)
+                       "residency": dataclasses.asdict(self.residency),
+                       "residency_engaged": resident,
                        "num_shards": self.num_shards,
                        "dataflow": cfg.gnn_dataflow,
                        "dataflow_per_layer": [
@@ -396,7 +440,8 @@ class Project:
             # trace-time backend scope, as gen_hw_model bakes into the
             # single-device programs
             with agg_mod.backend_scope(self.agg_backend, self.edge_block,
-                                       self.node_block):
+                                       self.node_block,
+                                       gather_mode=self.gather_mode):
                 return base(p, b)
 
         waves, dropped = data_mod.pack_dataset(
@@ -489,24 +534,47 @@ class Project:
             cost_p = cost_p[0]
         flops_p = float(cost_p.get("flops", 0.0))
         bytes_p = float(cost_p.get("bytes accessed", 0.0)) * width_scale
-        # aggregation-engine tile model: the segment kernel sweeps
-        # ceil(edge_budget/edge_block) x ceil(node_budget/node_block)
-        # grid steps per conv layer, each paying a fixed dispatch/DMA
-        # overhead — the II/unroll-factor analogue for the tile knobs,
-        # and what the fitted DSE models learn edge_block/node_block
-        # against (smaller tiles -> more steps -> higher latency).
-        grid_steps = (-(-self.edge_budget // self.edge_block)
-                      * -(-self.node_budget // self.node_block))
+        # aggregation-engine tile model: grid steps per conv layer, each
+        # paying a fixed dispatch/DMA overhead — the II/unroll-factor
+        # analogue for the tile knobs, and what the fitted DSE models
+        # learn edge_block/node_block against (smaller tiles -> more
+        # steps -> higher latency). The legacy one-hot kernel sweeps
+        # ceil(E/EB) x ceil(N/NB) steps; the v2 DMA kernel's grid is
+        # edge-tiles only (the node table is VMEM-resident).
+        grid_steps = -(-self.edge_budget // self.edge_block)
+        if self.gather_mode == "onehot":
+            grid_steps *= -(-self.node_budget // self.node_block)
         agg_overhead_s = (self.cfg.gnn_num_layers * grid_steps
                           * self.target.kernel_step_overhead)
-        latency_p = max(flops_p / eff_peak, bytes_p / self.target.hbm_bw) \
-            + agg_overhead_s
+        # gather-stage compute honesty: XLA's cost analysis prices the
+        # program it compiled, not the Pallas kernel the pallas backend
+        # dispatches at run time — and the legacy one-hot kernel's dense
+        # contractions are compute-bound by orders of magnitude. Fold
+        # the modeled gather FLOPs (convs.gather_compute_flops) into the
+        # roofline so a one-hot design can no longer "win" on modeled
+        # bytes while losing 40x on the clock.
+        gather_flops = 0.0
+        if self.agg_backend == "pallas":
+            feat = max(self.cfg.gnn_hidden_dim,
+                       self.cfg.graph_input_feature_dim)
+            gather_flops = self.cfg.gnn_num_layers \
+                * Cv.gather_compute_flops(self.node_budget,
+                                          self.edge_budget, feat,
+                                          self.gather_mode,
+                                          self.node_block)
+        latency_p = max((flops_p + gather_flops) / eff_peak,
+                        bytes_p / self.target.hbm_bw) + agg_overhead_s
         packed = {
             "latency_s": latency_p,
             "precision": self.policy.name,
             "compute_bytes": self.policy.compute_bytes,
             "agg_grid_steps": grid_steps,
             "agg_overhead_s": agg_overhead_s,
+            "gather_mode": self.gather_mode,
+            "gather_flops": gather_flops,
+            "fusion_depth": self.fusion_depth,
+            "residency_engaged": bool(
+                getattr(self, "residency_engaged", False)),
             "edge_block": self.edge_block,
             "node_block": self.node_block,
             "flops": flops_p,

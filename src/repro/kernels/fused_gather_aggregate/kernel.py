@@ -37,6 +37,20 @@ caller (core.aggregations), so dequantization also costs nothing extra.
 
 Supported: sum, mean, min, max — the family GCN/SAGE/GIN lower to.
 var/std (PNA towers) and per-edge MLPs keep the materialized path.
+
+Two generations live here (docs/KERNELS.md has the full contract):
+
+* ``fused_gather_aggregate_pallas`` — the **legacy one-hot** gather
+  (``gather_mode="onehot"``): the (N, EB) source one-hot contraction
+  routes the gather through the MXU, costing O(N * EB * F) MACs per
+  edge block and re-sweeping the edge stream once per node tile.
+* ``fused_gather_aggregate_v2_pallas`` — the **DMA gather**
+  (``gather_mode="dma"``, the default): the src/dst id streams are
+  scalar-prefetched into SMEM (PrefetchScalarGridSpec), node rows are
+  gathered by dynamic slice, and the per-edge scale stream is
+  double-buffered HBM->VMEM by explicit async copies — O(EB * F) work
+  per edge block, one sweep over the edge stream, no one-hot ever
+  materialized.
 """
 from __future__ import annotations
 
@@ -54,8 +68,7 @@ def _fused_kernel(x_ref, src_ref, dst_ref, scale_ref, out_ref, cnt_ref, *,
                   agg: str, edge_steps: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
-    nb, f = out_ref.shape
-    eb = src_ref.shape[1]
+    nb = out_ref.shape[0]
     n_src = x_ref.shape[0]
 
     @pl.when(j == 0)
@@ -90,18 +103,18 @@ def _fused_kernel(x_ref, src_ref, dst_ref, scale_ref, out_ref, cnt_ref, *,
                                 preferred_element_type=jnp.float32)
         cnt_ref[...] += jnp.sum(onef, axis=1, keepdims=True)
     else:
-        def body(e, state):
-            acc, cnt = state
-            sel = jax.lax.dynamic_slice(onehot, (0, e), (nb, 1))
-            row = jax.lax.dynamic_slice(msg, (e, 0), (1, f))
-            upd = jnp.minimum(acc, row) if agg == "min" \
-                else jnp.maximum(acc, row)
-            return (jnp.where(sel, upd, acc),
-                    cnt + sel.astype(jnp.float32))
-        acc, cnt = jax.lax.fori_loop(
-            0, eb, body, (out_ref[...], cnt_ref[...]))
-        out_ref[...] = acc
-        cnt_ref[...] = cnt
+        # vectorized masked scatter: broadcast the (NB, EB) assignment
+        # over the feature axis and reduce the edge axis in one VPU
+        # expression — unassigned (node, edge) pairs contribute the
+        # neutral element, so the whole block folds in at once instead
+        # of a per-edge serial fori_loop
+        neutral = jnp.inf if agg == "min" else -jnp.inf
+        masked = jnp.where(onehot[:, :, None], msg[None], neutral)
+        blk = masked.min(axis=1) if agg == "min" else masked.max(axis=1)
+        out_ref[...] = jnp.minimum(out_ref[...], blk) if agg == "min" \
+            else jnp.maximum(out_ref[...], blk)
+        cnt_ref[...] += jnp.sum(onehot.astype(jnp.float32), axis=1,
+                                keepdims=True)
 
     @pl.when(j == edge_steps - 1)
     def _finalize():
@@ -168,3 +181,147 @@ def fused_gather_aggregate_pallas(x, src, dst, num_segments: int, *,
     )(x, src.reshape(1, e + e_pad),
       dst.reshape(1, e + e_pad), scale.reshape(1, e + e_pad))
     return out[:num_segments]
+
+
+# ------------------------------------------------------------ gather v2 --
+def _v2_kernel(src_ref, dst_ref, x_ref, scale_hbm, out_ref, sbuf, sems,
+               cnt_ref, *, agg: str, edge_steps: int, eb: int,
+               track_count: bool):
+    """One grid step folds one edge block into the resident accumulator.
+
+    src_ref/dst_ref are the *whole* id streams in SMEM (scalar prefetch);
+    scale_hbm stays in HBM (memory_space=ANY) and is copied in one edge
+    block ahead of compute through the two-slot ``sbuf`` VMEM scratch —
+    the double-buffered HBM->VMEM edge pipeline. x_ref and out_ref are
+    whole-table VMEM residents."""
+    j = pl.program_id(0)
+
+    def dma(slot, step):
+        return pltpu.make_async_copy(
+            scale_hbm.at[:, pl.ds(step * eb, eb)], sbuf.at[slot],
+            sems.at[slot])
+
+    @pl.when(j == 0)
+    def _init():
+        if track_count:
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        if agg in ("sum", "mean"):
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif agg == "min":
+            out_ref[...] = jnp.full(out_ref.shape, jnp.inf, out_ref.dtype)
+        else:
+            out_ref[...] = jnp.full(out_ref.shape, -jnp.inf, out_ref.dtype)
+        dma(0, 0).start()
+
+    slot = jax.lax.rem(j, 2)
+
+    @pl.when(j + 1 < edge_steps)
+    def _prefetch_next():
+        dma(1 - slot, j + 1).start()
+
+    dma(slot, j).wait()
+
+    base = j * eb
+
+    def body(e, _):
+        s = src_ref[base + e]
+        d = dst_ref[base + e]
+        sl = jnp.maximum(s, 0)
+        dl = jnp.maximum(d, 0)
+        sc = sbuf[slot, 0, e]
+        row = x_ref[pl.ds(sl, 1), :].astype(jnp.float32) * sc
+        cur = out_ref[pl.ds(dl, 1), :]
+        if agg in ("sum", "mean"):
+            # padding edges carry scale == 0: they add a zero row at the
+            # clamped slot, so no validity select is needed on this path
+            out_ref[pl.ds(dl, 1), :] = cur + row
+        else:
+            ok = d >= 0
+            upd = jnp.minimum(cur, row) if agg == "min" \
+                else jnp.maximum(cur, row)
+            out_ref[pl.ds(dl, 1), :] = jnp.where(ok, upd, cur)
+        if track_count:
+            c = cnt_ref[pl.ds(dl, 1), :]
+            cnt_ref[pl.ds(dl, 1), :] = c + jnp.where(d >= 0, 1.0, 0.0)
+        return 0
+
+    jax.lax.fori_loop(0, eb, body, 0)
+
+    @pl.when(j == edge_steps - 1)
+    def _finalize():
+        if agg == "mean":
+            out_ref[...] = out_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+        elif agg in ("min", "max"):
+            o = out_ref[...]
+            out_ref[...] = jnp.where(jnp.isfinite(o), o, 0.0)
+
+
+def fused_gather_aggregate_v2_pallas(x, src, dst, num_segments: int, *,
+                                     scale=None, agg: str = "sum",
+                                     edge_block: int = 128,
+                                     node_block: int = 128,
+                                     interpret: bool = True):
+    """One-hot-free fused gather (``gather_mode="dma"``, the default).
+
+    Same contract as ``fused_gather_aggregate_pallas`` — x: (N, F) node
+    table in fp32/bf16/int8 (VMEM-resident at storage width, fp32
+    accumulation); src/dst: (E,) int32 with -1/out-of-range = padding;
+    scale: optional (E,) per-edge phi (int8 dequant folds in here);
+    returns (num_segments, F) float32, empty segments zero-fill — but a
+    different machine: the id streams ride in SMEM via scalar prefetch,
+    each source row is gathered by dynamic slice (O(EB * F) per edge
+    block instead of the one-hot's O(N * EB * F)), the scale stream is
+    double-buffered HBM->VMEM by explicit async copies, and the whole
+    (num_segments, F) accumulator is VMEM-resident, so the edge stream
+    is swept exactly once (``node_block`` is accepted for knob
+    compatibility and ignored).
+
+    Grid: (edge_tiles,). Scratch: two-slot (2, 1, EB) scale buffer + a
+    DMA semaphore pair + the mean path's (num_segments, 1) count column.
+    """
+    assert agg in AGGS, agg
+    del node_block                       # v2 keeps the whole table
+    n_src, f = x.shape
+    e = src.shape[0]
+    if e == 0 or num_segments == 0:
+        return jnp.zeros((num_segments, f), jnp.float32)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    bad = (src < 0) | (src >= n_src) | (dst < 0) | (dst >= num_segments)
+    src = jnp.where(bad, -1, src)
+    dst = jnp.where(bad, -1, dst)
+    if scale is None:
+        scale = jnp.ones((e,), jnp.float32)
+    scale = jnp.where(bad, 0.0, scale.astype(jnp.float32))
+    eb = min(edge_block, e)
+    e_pad = (-e) % eb
+    if e_pad:
+        src = jnp.pad(src, (0, e_pad), constant_values=-1)
+        dst = jnp.pad(dst, (0, e_pad), constant_values=-1)
+        scale = jnp.pad(scale, (0, e_pad))
+    steps = (e + e_pad) // eb
+    track_count = agg == "mean"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((n_src, f), lambda j, s_r, d_r: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # scale stays HBM
+        ],
+        out_specs=pl.BlockSpec((num_segments, f),
+                               lambda j, s_r, d_r: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, eb), jnp.float32),       # two-slot buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((num_segments if track_count else 8, 1),
+                       jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_v2_kernel, agg=agg, edge_steps=steps, eb=eb,
+                          track_count=track_count),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, f), jnp.float32),
+        interpret=interpret,
+    )(src, dst, x, scale.reshape(1, e + e_pad))
+    return out

@@ -48,3 +48,42 @@ def fused_gather_aggregate_ref(x, src, dst, num_segments: int, *,
         out = masked.min(1) if agg == "min" else masked.max(1)
         return jnp.where(jnp.isfinite(out), out, 0.0)
     raise ValueError(agg)
+
+
+def fused_gather_aggregate_v2_ref(x, src, dst, num_segments: int, *,
+                                  scale=None, agg: str = "sum"):
+    """Oracle for the v2 (one-hot-free) kernel: indexed gather of the
+    clamped source ids — the dense mirror of the kernel's per-edge
+    dynamic-slice gather — then per-destination masked reductions over
+    the full edge stream. Same normalization as the kernel wrapper
+    (out-of-range ids on either stream kill the whole edge; padding
+    gathers a zero row via scale == 0), same neutral elements, same
+    zero-fill for empty segments. Same arguments and results as
+    ``fused_gather_aggregate_ref``; only the gather machinery differs.
+    """
+    xf = x.astype(jnp.float32)
+    n_src, _ = xf.shape
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+    bad = (src < 0) | (src >= n_src) | (dst < 0) | (dst >= num_segments)
+    src = jnp.where(bad, -1, src)
+    dst = jnp.where(bad, -1, dst)
+    if scale is None:
+        scale = jnp.ones(src.shape, jnp.float32)
+    scale = jnp.where(bad, 0.0, scale.astype(jnp.float32))
+    rows = jnp.take(xf, jnp.maximum(src, 0), axis=0) \
+        * scale[:, None]                              # (E, F)
+    node_ids = jnp.arange(num_segments, dtype=jnp.int32)[:, None]
+    onehot = dst[None, :] == node_ids                 # (S, E)
+    cnt = onehot.astype(jnp.float32).sum(1, keepdims=True)
+    if agg == "sum":
+        return jnp.where(onehot[:, :, None], rows[None], 0.0).sum(1)
+    if agg == "mean":
+        s = jnp.where(onehot[:, :, None], rows[None], 0.0).sum(1)
+        return s / jnp.maximum(cnt, 1.0)
+    if agg in ("min", "max"):
+        neutral = jnp.inf if agg == "min" else -jnp.inf
+        masked = jnp.where(onehot[:, :, None], rows[None], neutral)
+        out = masked.min(1) if agg == "min" else masked.max(1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    raise ValueError(agg)

@@ -72,18 +72,17 @@ def _seg_kernel(msg_ref, dst_ref, out_ref, *scratch, agg: str,
                                 preferred_element_type=jnp.float32)
         cnt_ref[...] += jnp.sum(onef, axis=1, keepdims=True)
     elif agg in ("min", "max"):
-        def body(e, state):
-            acc, cnt = state
-            sel = jax.lax.dynamic_slice(onehot, (0, e), (nb, 1))
-            row = jax.lax.dynamic_slice(msg, (e, 0), (1, f))
-            upd = jnp.minimum(acc, row) if agg == "min" \
-                else jnp.maximum(acc, row)
-            return (jnp.where(sel, upd, acc),
-                    cnt + sel.astype(jnp.float32))
-        acc, cnt = jax.lax.fori_loop(
-            0, eb, body, (out_ref[...], cnt_ref[...]))
-        out_ref[...] = acc
-        cnt_ref[...] = cnt
+        # vectorized masked scatter (same shape as the fused kernel's):
+        # unassigned (node, edge) pairs contribute the neutral element,
+        # so one (NB, EB, F) where + edge-axis reduce replaces the
+        # per-edge serial fori_loop
+        neutral = jnp.inf if agg == "min" else -jnp.inf
+        masked = jnp.where(onehot[:, :, None], msg[None], neutral)
+        blk = masked.min(axis=1) if agg == "min" else masked.max(axis=1)
+        out_ref[...] = jnp.minimum(out_ref[...], blk) if agg == "min" \
+            else jnp.maximum(out_ref[...], blk)
+        cnt_ref[...] += jnp.sum(onehot.astype(jnp.float32), axis=1,
+                                keepdims=True)
     else:
         # Welford single-pass (paper §V-B): O(1) state per node row
         mean_ref, m2_ref = scratch[1], scratch[2]

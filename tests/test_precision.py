@@ -377,10 +377,14 @@ def test_dataflow_cost_scales_with_byte_width():
     half = C.dataflow_cost(64, 16, 2.0, msg_bytes=2.0)
     assert half["aggregate_first"] < full["aggregate_first"]
     assert half["transform_first"] < full["transform_first"]
-    # stream-term difference scales exactly with bytes
+    # the byte-dependent stream term scales exactly with bytes; the
+    # gather-compute term (gather_compute_flops, byte-invariant fp32
+    # work) does not — msg_bytes=0 isolates it
+    zero = C.dataflow_cost(64, 16, 2.0, msg_bytes=0.0)
     gap_full = full["aggregate_first"] - full["transform_first"]
     gap_half = half["aggregate_first"] - half["transform_first"]
-    assert gap_half == pytest.approx(gap_full / 2.0)
+    gap_zero = zero["aggregate_first"] - zero["transform_first"]
+    assert gap_half - gap_zero == pytest.approx((gap_full - gap_zero) / 2.0)
     # the choice itself is width-invariant (both sides scale equally)
     cc = C.ConvConfig(64, 16, conv="gcn", precision=_lp("int8"))
     assert C.resolve_dataflow(cc) == "transform_first"
