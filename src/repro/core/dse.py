@@ -216,16 +216,66 @@ def fit_models(db: list, latency_key: str = "latency_s",
     return FittedModels(lat, mem, thr)
 
 
+# SLO-aware exploration defaults (objective="p99_latency"): the offered
+# load the design must sustain, the launch-policy deadline, the scripted
+# trace length, and how many best-predicted-latency candidates get the
+# (pure-virtual-time, jax-free) traffic simulation.
+DEFAULT_SLO = {
+    "load_graphs_per_s": 2048.0,
+    "deadline_s": 0.02,
+    "n_requests": 192,
+    "top_k": 24,
+    "trace_seed": 0,
+    "max_queue_depth": 4096,
+}
+
+
+def simulate_traffic(d: dict, service_s: float, trace,
+                     deadline_s: float = 0.02,
+                     max_queue_depth: int = 4096) -> dict:
+    """Serve ``trace`` (an open-loop arrival process) through the
+    continuous-batching scheduler with design ``d``'s packed budgets and
+    a constant per-launch service time (the packed program is
+    fixed-shape, so a launch costs the same however full it is).
+    Pure virtual time — milliseconds per candidate, no devices touched.
+    Returns the scheduler's summary (p50/p99 latency, fill, rejections).
+    """
+    from repro.runtime import scheduler as S
+    cfg = S.SchedulerConfig(
+        node_budget=d["node_budget"], edge_budget=d["edge_budget"],
+        max_graphs=d["batch_graphs"], max_queue_depth=max_queue_depth,
+        default_tier=S.SLOTier("standard", deadline_s, 1))
+    sched = S.ContinuousScheduler(
+        cfg, S.SimExecutor(S.constant_service(service_s)))
+    S.run_trace(sched, trace)
+    return sched.summary()
+
+
 def explore(models: FittedModels, n_candidates: int = 4096, seed: int = 1,
             memory_budget: float = TPUTarget().hbm_bytes,
-            base: dict | None = None) -> dict:
+            base: dict | None = None, objective: str = "latency",
+            slo: dict | None = None) -> dict:
     """Random-sample the space, predict in milliseconds, return the best
-    latency design under the memory constraint (paper DSE loop).
+    design under the memory constraint (paper DSE loop).
+
+    ``objective="latency"`` (default) minimizes predicted batch latency —
+    the paper's offline objective. ``objective="p99_latency"`` minimizes
+    the *p99 request latency under traffic*: the ``slo["top_k"]``
+    best-predicted candidates that fit the memory budget are each
+    simulated serving an open-loop Poisson arrival trace at
+    ``slo["load_graphs_per_s"]`` through the continuous-batching
+    scheduler (``simulate_traffic``; per-launch service time is
+    ``batch_graphs / predicted_graphs_per_s``), and the winner is the
+    lowest simulated p99 — so budget/deadline configs are chosen
+    against the traffic they must carry, not raw throughput
+    (docs/DSE.md).
 
     Fails soft: when no candidate fits the budget, the best-latency
     infeasible design is returned flagged ``feasible: False`` with its
     violation margin, instead of raising.
     """
+    if objective not in ("latency", "p99_latency"):
+        raise ValueError(f"unknown objective {objective!r}")
     rng = np.random.default_rng(seed)
     cands = []
     for _ in range(n_candidates):
@@ -251,6 +301,9 @@ def explore(models: FittedModels, n_candidates: int = 4096, seed: int = 1,
         return best
 
     order = np.argsort(lat)
+    if objective == "p99_latency":
+        return _explore_slo(cands, lat, mem, thr, order, memory_budget,
+                            dict(DEFAULT_SLO, **(slo or {})), result)
     for i in order:
         if mem[i] <= memory_budget:
             return result(i, True)
@@ -262,4 +315,52 @@ def explore(models: FittedModels, n_candidates: int = 4096, seed: int = 1,
         violation)
     best = result(i, False)
     best["memory_violation_bytes"] = violation
+    return best
+
+
+def _explore_slo(cands, lat, mem, thr, order, memory_budget, slo,
+                 result) -> dict:
+    """The p99-under-load tail of ``explore``: simulate the top-k
+    feasible candidates through the scheduler and rank by p99."""
+    from repro.runtime import scheduler as S
+    feasible_idx = [i for i in order if mem[i] <= memory_budget]
+    feasible = bool(feasible_idx)
+    if not feasible:
+        log_.warning(
+            "no design fits the memory budget (%.3g B); simulating the "
+            "best infeasible candidates instead", memory_budget)
+    pool = (feasible_idx or list(order))[:int(slo["top_k"])]
+    ds_cfg = GraphDataConfig(num_graphs=int(slo["n_requests"]),
+                             seed=int(slo["trace_seed"]))
+    trace = S.poisson_trace(int(slo["n_requests"]),
+                            float(slo["load_graphs_per_s"]), ds_cfg,
+                            seed=int(slo["trace_seed"]))
+    t0 = time.time()
+    best_i, best_p99, best_summary = None, float("inf"), None
+    for i in pool:
+        d = cands[i]
+        if thr is not None and thr[i] > 0:
+            service_s = d["batch_graphs"] / float(thr[i])
+        else:
+            service_s = float(lat[i])
+        summary = simulate_traffic(
+            d, service_s, trace, deadline_s=float(slo["deadline_s"]),
+            max_queue_depth=int(slo["max_queue_depth"]))
+        # a design that sheds load cannot win on the latency of the
+        # requests it deigned to answer: rejections disqualify first
+        key = (summary["rejected_queue_full"], summary["p99_latency_s"])
+        if best_summary is None or key < (
+                best_summary["rejected_queue_full"], best_p99):
+            best_i, best_p99, best_summary = i, summary["p99_latency_s"], \
+                summary
+    best = result(best_i, feasible)
+    if not feasible:
+        best["memory_violation_bytes"] = float(mem[best_i] - memory_budget)
+    best["objective"] = "p99_latency"
+    best["pred_p99_latency_s"] = float(best_p99)
+    best["pred_p50_latency_s"] = float(best_summary["p50_latency_s"])
+    best["pred_batch_fill"] = float(best_summary["mean_batch_fill"])
+    best["pred_rejected"] = int(best_summary["rejected_queue_full"])
+    best["slo"] = dict(slo)
+    best["slo_sim_seconds"] = time.time() - t0
     return best

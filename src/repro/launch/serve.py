@@ -17,12 +17,22 @@ reports the output error vs the fp32 program next to the throughput.
 ``--shards N`` drains the queue into per-device packed shard waves over
 a ("data",) device mesh instead — one SPMD program, params replicated,
 each device consuming its own shard (the oversize fallback is
-unchanged). Full lifecycle: docs/SERVING.md.
+unchanged).
+
+``--scheduler continuous`` swaps the synchronous wave drain for the
+continuous-batching scheduler (runtime.scheduler): the queue is
+replayed as an open-loop Poisson arrival process at ``--load`` graphs/s
+on a virtual clock, requests feed continuously into partially-filled
+packed batches, and a batch launches on ``--deadline-ms`` expiry or
+budget-full; measured service times make the reported p50/p99
+traffic-shaped while the compute is real. Full lifecycle:
+docs/SERVING.md.
 
   PYTHONPATH=src python -m repro.launch.serve --gnn --conv gcn \
       --requests 256 --batch-graphs 32 [--agg-backend pallas] \
       [--dataflow auto|aggregate_first|transform_first] \
-      [--precision fp32|bf16|int8] [--shards 4]
+      [--precision fp32|bf16|int8] [--shards 4] \
+      [--scheduler continuous --load 512 --deadline-ms 50]
 """
 from __future__ import annotations
 
@@ -50,40 +60,35 @@ def pad_caches(prefill_caches, full_caches):
     return jax.tree_util.tree_map(place, full_caches, prefill_caches)
 
 
-def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
-                    batch_graphs: int, fallback_fn=None):
-    """Drain ``queue`` (a list of data.pipeline.Graph requests) through
-    the packed program ``fn``; every call sees the same static shapes, so
-    XLA compiles exactly once. Returns (outputs per batch, stats).
+def _fallback_input(g) -> dict:
+    """Padded per-graph oracle input for one oversize Graph request."""
+    return {"node_feat": jnp.asarray(g.node_feat),
+            "edge_index": jnp.asarray(g.edge_index),
+            "edge_feat": jnp.asarray(g.edge_feat),
+            "num_nodes": jnp.int32(g.num_nodes)}
 
-    Request lifecycle (docs/SERVING.md): requests that fit the budgets
-    are greedily packed into fixed-shape GraphBatches and answered by
-    the packed program. Requests too large for the budgets cannot ride
-    a GraphBatch; with ``fallback_fn`` (the padded per-graph oracle
-    ``G.apply``, jitted) each one is answered individually through it,
-    so every request gets a response and ``stats["fallback_served"]``
-    counts them. Only when no fallback program is supplied are oversize
-    requests dropped (``stats["dropped"]``)."""
-    from repro.core import gnn_model as G
-    from repro.data import pipeline as P
-    batches, oversize = P.pack_dataset(queue, node_budget, edge_budget,
-                                       batch_graphs)
+
+def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
+                   graphs_in, slots_in, slot_capacity: int):
+    """Shared pack-and-launch body of the wave drains (and of anything
+    else that runs a prepacked batch list): run every batch through
+    ``run_batch``, answer oversize requests through ``fallback_fn`` (the
+    padded per-graph oracle on a ``_fallback_input`` dict) when one is
+    supplied, block, and account. ``graphs_in``/``slots_in`` count the
+    graphs and occupied node slots of one batch (they differ between the
+    single-device and sharded layouts). Returns
+    (batch_outs, fallback_outs, stats)."""
     outs = []
     served = 0
     slots_used = 0
     t0 = time.perf_counter()
     for b in batches:
-        outs.append(fn(params, G.packed_to_device(b)))
-        served += int(b["num_graphs"])
-        slots_used += int((b["node_graph_id"] < batch_graphs).sum())
+        outs.append(run_batch(b))
+        served += graphs_in(b)
+        slots_used += slots_in(b)
     fallback_outs = []
     if fallback_fn is not None:
-        for g in oversize:
-            el = {"node_feat": jnp.asarray(g.node_feat),
-                  "edge_index": jnp.asarray(g.edge_index),
-                  "edge_feat": jnp.asarray(g.edge_feat),
-                  "num_nodes": jnp.int32(g.num_nodes)}
-            fallback_outs.append(fallback_fn(params, el))
+        fallback_outs = [fallback_fn(_fallback_input(g)) for g in oversize]
     jax.block_until_ready(outs + fallback_outs)
     total_s = time.perf_counter() - t0
     n_fallback = len(fallback_outs)
@@ -94,10 +99,41 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
         "dropped": len(oversize) - n_fallback,
         "n_batches": len(batches),
         "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
-        "node_slot_utilization":
-            slots_used / max(len(batches) * node_budget, 1),
+        "node_slot_utilization": slots_used / max(slot_capacity, 1),
         "total_s": total_s,
     }
+    return outs, fallback_outs, stats
+
+
+def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
+                    batch_graphs: int, fallback_fn=None):
+    """Synchronous wave drain of ``queue`` (a list of data.pipeline.Graph
+    requests) through the packed program ``fn``; every call sees the same
+    static shapes, so XLA compiles exactly once. Returns
+    (outputs per batch, stats).
+
+    Request lifecycle (docs/SERVING.md): requests that fit the budgets
+    are greedily packed into fixed-shape GraphBatches and answered by
+    the packed program. Requests too large for the budgets cannot ride
+    a GraphBatch; with ``fallback_fn`` (the padded per-graph oracle
+    ``G.apply``, jitted) each one is answered individually through it,
+    so every request gets a response and ``stats["fallback_served"]``
+    counts them. Only when no fallback program is supplied are oversize
+    requests dropped (``stats["dropped"]``).
+
+    This drain is the offline-throughput baseline (and parity oracle)
+    for the continuous-batching scheduler — see
+    ``drain_gnn_queue_continuous`` for the latency-aware path."""
+    from repro.core import gnn_model as G
+    from repro.data import pipeline as P
+    batches, oversize = P.pack_dataset(queue, node_budget, edge_budget,
+                                       batch_graphs)
+    outs, fallback_outs, stats = _launch_packed(
+        lambda b: fn(params, G.packed_to_device(b)), batches, oversize,
+        None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
+        graphs_in=lambda b: int(b["num_graphs"]),
+        slots_in=lambda b: int((b["node_graph_id"] < batch_graphs).sum()),
+        slot_capacity=len(batches) * node_budget)
     return outs + fallback_outs, stats
 
 
@@ -105,7 +141,7 @@ def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
                             edge_budget: int, batch_graphs: int,
                             num_shards: int, fallback_fn=None,
                             task: str = "graph"):
-    """Sharded drain: requests are partitioned into per-device shard
+    """Sharded wave drain: requests are partitioned into per-device shard
     waves (data.pipeline.pack_dataset(num_shards=)) and each wave runs
     as one SPMD program over the ("data",) mesh — ``fn`` from
     ``gnn_model.make_sharded_apply``, compiled exactly once. Graph-task
@@ -113,49 +149,71 @@ def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
     tasks (``task="node"``) get the raw stacked per-shard node tables
     per wave — their row order is shard-local, so there is no global
     host order to restore. The oversize padded fallback behaves exactly
-    as in ``drain_gnn_queue``."""
+    as in ``drain_gnn_queue`` (same ``_launch_packed`` body)."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
     waves, oversize = P.pack_dataset(queue, node_budget, edge_budget,
                                      batch_graphs, num_shards=num_shards)
-    served = 0
-    slots_used = 0
-    t0 = time.perf_counter()
-    dev_outs = []
-    for w in waves:
-        dev_outs.append(fn(params, G.stack_shards(w)))
-        served += w.n_graphs
-        slots_used += sum(int((b["node_graph_id"] < batch_graphs).sum())
-                          for b in w.shards)
-    fallback_outs = []
-    if fallback_fn is not None:
-        for g in oversize:
-            el = {"node_feat": jnp.asarray(g.node_feat),
-                  "edge_index": jnp.asarray(g.edge_index),
-                  "edge_feat": jnp.asarray(g.edge_feat),
-                  "num_nodes": jnp.int32(g.num_nodes)}
-            fallback_outs.append(fallback_fn(params, el))
-    jax.block_until_ready(dev_outs + fallback_outs)
-    total_s = time.perf_counter() - t0
+    dev_outs, fallback_outs, stats = _launch_packed(
+        lambda w: fn(params, G.stack_shards(w)), waves, oversize,
+        None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
+        graphs_in=lambda w: w.n_graphs,
+        slots_in=lambda w: sum(int((b["node_graph_id"]
+                                    < batch_graphs).sum())
+                               for b in w.shards),
+        slot_capacity=len(waves) * num_shards * node_budget)
+    stats["num_shards"] = num_shards
     if task == "graph":
         outs = [P.gather_shard_outputs(np.asarray(o), w.index)
                 for w, o in zip(waves, dev_outs)]
     else:
         outs = dev_outs
-    n_fallback = len(fallback_outs)
-    stats = {
-        "served": served + n_fallback,
-        "packed_served": served,
-        "fallback_served": n_fallback,
-        "dropped": len(oversize) - n_fallback,
-        "n_batches": len(waves),
-        "num_shards": num_shards,
-        "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
-        "node_slot_utilization":
-            slots_used / max(len(waves) * num_shards * node_budget, 1),
-        "total_s": total_s,
-    }
     return outs + fallback_outs, stats
+
+
+def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
+                               edge_budget: int, batch_graphs: int,
+                               fallback_fn=None, *,
+                               load_graphs_per_s: float = 512.0,
+                               deadline_s: float = 0.05,
+                               max_queue_depth: int = 1024,
+                               seed: int = 0):
+    """Continuous-batching drain (``runtime.scheduler``): the queue is
+    replayed as an open-loop Poisson arrival process at
+    ``load_graphs_per_s`` on the scheduler's virtual clock, while each
+    launch's service time is the *measured* wall-seconds of the real
+    packed program (``MeasuredExecutor``) — so the p50/p99 latency
+    statistics are traffic-shaped, the compute cost is real, and the
+    outputs are the real program's outputs (parity with the wave
+    drain). Batches launch on deadline expiry or budget-full; oversize
+    requests ride ``fallback_fn``; admissions beyond ``max_queue_depth``
+    are rejected explicitly. Returns (responses, stats) — ``responses``
+    are ``runtime.scheduler.Response`` records carrying per-request
+    outputs and latencies. Lifecycle: docs/SERVING.md."""
+    from repro.core import gnn_model as G
+    from repro.runtime import scheduler as S
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0xA221]))
+    t = 0.0
+    trace = []
+    for g in queue:
+        t += float(rng.exponential(1.0 / load_graphs_per_s))
+        trace.append((t, g, "default"))
+    executor = S.MeasuredExecutor(
+        batch_fn=lambda b: np.asarray(jax.block_until_ready(
+            fn(params, G.packed_to_device(b)))),
+        fallback_fn=None if fallback_fn is None else (lambda g: np.asarray(
+            jax.block_until_ready(fallback_fn(params, _fallback_input(g))))))
+    sched = S.ContinuousScheduler(
+        S.SchedulerConfig(node_budget, edge_budget, batch_graphs,
+                          max_queue_depth=max_queue_depth,
+                          default_tier=S.SLOTier("standard", deadline_s, 1)),
+        executor)
+    S.run_trace(sched, trace)
+    stats = sched.summary()
+    stats["n_batches"] = stats["n_launches"]
+    stats["offered_load_graphs_per_s"] = load_graphs_per_s
+    stats["deadline_s"] = deadline_s
+    return sched.responses, stats
 
 
 def gnn_main(args):
@@ -200,6 +258,10 @@ def gnn_main(args):
     # request is answered, not silently dropped
     fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el, None, policy))
 
+    if args.scheduler == "continuous" and args.shards > 1:
+        raise SystemExit("--scheduler continuous drives a single-host "
+                         "executor; drop --shards or use --scheduler wave")
+
     if args.shards > 1:
         # data-parallel sharded drain: waves of per-device shards over a
         # ("data",) mesh, params replicated, one SPMD program
@@ -220,6 +282,27 @@ def gnn_main(args):
 
     # warmup: compile the single fixed-shape program
     _, _ = drain(warm)
+
+    if args.scheduler == "continuous":
+        # continuous batching: open-loop Poisson arrivals on the virtual
+        # clock, measured service times, deadline/budget-full launches
+        _, stats = drain_gnn_queue_continuous(
+            fn, params, queue, node_budget, edge_budget,
+            args.batch_graphs, fallback_fn,
+            load_graphs_per_s=args.load, deadline_s=args.deadline_ms / 1e3,
+            max_queue_depth=args.queue_depth)
+        stats["precision"] = policy.name
+        print(f"conv={args.conv} precision={policy.name} continuous "
+              f"scheduler served {stats['served']}/{len(queue)} graphs in "
+              f"{stats['n_batches']} launches at "
+              f"{args.load:.0f} offered graphs/s "
+              f"(p50 {stats['p50_latency_s'] * 1e3:.1f} ms, "
+              f"p99 {stats['p99_latency_s'] * 1e3:.1f} ms, batch fill "
+              f"{stats['mean_batch_fill'] * 100:.0f}%, sustained "
+              f"{stats['graphs_per_s']:.0f} graphs/s, "
+              f"{stats['fallback_served']} oversize via padded fallback, "
+              f"{stats['rejected_queue_full']} rejected by backpressure)")
+        return stats
     _, stats = drain(queue)
     stats["precision"] = policy.name
     stats["compute_bytes"] = policy.compute_bytes
@@ -278,6 +361,24 @@ def main():
                     help="PrecisionPolicy datapath for --gnn serving "
                          "(low-precision tiles, fp32 accumulation; int8 "
                          "grids calibrated on the warmup batch)")
+    ap.add_argument("--scheduler", default="wave",
+                    choices=["wave", "continuous"],
+                    help="--gnn queue discipline: 'wave' drains the whole "
+                         "queue through synchronous packed waves (offline "
+                         "throughput baseline); 'continuous' replays it as "
+                         "an open-loop Poisson arrival process through the "
+                         "continuous-batching scheduler "
+                         "(runtime.scheduler, docs/SERVING.md)")
+    ap.add_argument("--load", type=float, default=512.0,
+                    help="offered load in graphs/s for --scheduler "
+                         "continuous (open-loop Poisson arrivals)")
+    ap.add_argument("--deadline-ms", type=float, default=50.0,
+                    help="max queue wait before a partially-filled batch "
+                         "launches (--scheduler continuous; the "
+                         "latency/throughput knob)")
+    ap.add_argument("--queue-depth", type=int, default=1024,
+                    help="pending-queue bound for --scheduler continuous; "
+                         "admissions beyond it are rejected (backpressure)")
     ap.add_argument("--shards", type=int, default=1,
                     help="data-parallel device shards for --gnn serving: "
                          "the queue drains into per-device packed shard "

@@ -16,6 +16,8 @@ from jax.sharding import Mesh
 def plan_mesh_shape(n_devices: int, model_pref: int = 16,
                     pod: int | None = None) -> tuple:
     """Largest (data, model) grid with model | model_pref, data maximal."""
+    if n_devices < 1:
+        raise ValueError(f"need at least one device, got {n_devices}")
     model = model_pref
     while model > 1 and n_devices % model:
         model //= 2

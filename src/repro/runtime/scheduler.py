@@ -1,0 +1,667 @@
+"""Continuous-batching GNN serving scheduler (ROADMAP item 1).
+
+``launch/serve.py --gnn`` historically drained its queue in synchronous
+waves: collect a window of requests, pack, run, repeat — fine for
+offline throughput, wrong for live traffic where a request's latency is
+dominated by how long it waits for its batch to form. This module is
+the event-driven replacement: requests are admitted continuously into a
+partially-filled packed batch under the GraphBatch node/edge budgets,
+and a launch policy fires the batch on **deadline expiry** (the oldest
+pending request has waited its SLO tier's ``deadline_s``) or
+**budget-full** (max_graphs reached, or the node/edge budget blocks a
+pending request from riding) — the latency/throughput trade is exactly
+that deadline knob.
+
+Design rules:
+
+* **Clock-injected.** The scheduler never reads wall time; it asks an
+  injected clock (``VirtualClock``). Scripted arrival traces therefore
+  replay bit-identically — no sleeps, no flakes
+  (tests/test_scheduler.py). Real serving keeps the virtual arrival
+  timeline but lets ``MeasuredExecutor`` report measured wall-seconds
+  as the service time, so latency statistics are traffic-shaped while
+  compute cost is real.
+* **jax-free.** Execution hides behind the executor protocol
+  (``run_batch``/``run_fallback`` -> (outputs, service_s)); the
+  scheduler itself only packs and keeps time, so the DSE can simulate
+  thousands of traffic scenarios (``dse.explore(objective=
+  "p99_latency")``) without touching a device.
+* **Explicit rejection.** Pending queues are bounded
+  (``max_queue_depth`` per tenant); an admission that would exceed the
+  bound is rejected immediately (``rejected_queue_full``) instead of
+  buffered without bound. Oversize requests ride the padded fallback
+  path when the executor provides one, else they are rejected
+  (``rejected_oversize``) — never silently dropped.
+* **Straggler re-packing.** Per-executor health rides
+  ``runtime.straggler.StragglerDetector``: every completion records the
+  lane's service time, and a lane flagged ``evict`` is retired (no
+  further launches) so its would-have-been work re-packs onto the
+  healthy lanes. Executor-pool shape comes from
+  ``runtime.elastic.plan_mesh_shape`` (``plan_executor_pool``).
+
+Lifecycle diagram and knob table: docs/SERVING.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.data import pipeline as P
+from repro.runtime.elastic import plan_mesh_shape
+from repro.runtime.straggler import StragglerDetector
+
+# response statuses — every submitted request ends in exactly one of these
+SERVED_PACKED = "served_packed"
+SERVED_FALLBACK = "served_fallback"
+REJECTED_QUEUE = "rejected_queue_full"
+REJECTED_OVERSIZE = "rejected_oversize"
+
+
+# ------------------------------------------------------------------ clock --
+
+class VirtualClock:
+    """Injected simulation time: starts at ``t0``, only moves forward."""
+
+    def __init__(self, t0: float = 0.0):
+        self._now = float(t0)
+
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float):
+        if t < self._now - 1e-12:
+            raise ValueError(f"clock cannot run backwards: {t} < {self._now}")
+        self._now = max(self._now, float(t))
+
+
+# ---------------------------------------------------------------- metrics --
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile: the smallest sample whose empirical CDF
+    reaches q/100 (``sorted(values)[ceil(q/100 * n) - 1]``). Chosen over
+    interpolating definitions because scripted traces then have
+    *closed-form* expected p50/p99 the tests can assert exactly."""
+    s = sorted(values)
+    if not s:
+        return float("nan")
+    k = max(1, math.ceil(q / 100.0 * len(s)))
+    return float(s[min(k, len(s)) - 1])
+
+
+def summarize(responses, *, fills=(), max_graphs: int = 0,
+              node_budget: int = 0, nodes_used: int = 0) -> dict:
+    """Latency/throughput/fill statistics over a response list. Shared by
+    the continuous scheduler and the wave-drain baseline so their
+    figures are directly comparable."""
+    served = [r for r in responses if r.served]
+    lat = [r.latency_s for r in served]
+    by_status: dict = {}
+    for r in responses:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    t0 = min((r.arrival_s for r in served), default=0.0)
+    t1 = max((r.complete_s for r in served), default=0.0)
+    tenants = sorted({r.tenant for r in responses})
+    per_tenant = {}
+    for t in tenants:
+        tl = [r.latency_s for r in served if r.tenant == t]
+        per_tenant[t] = {
+            "served": len(tl),
+            "rejected": sum(1 for r in responses
+                            if r.tenant == t and not r.served),
+            "p50_latency_s": percentile(tl, 50),
+            "p99_latency_s": percentile(tl, 99),
+        }
+    n_packed = len(fills)
+    return {
+        "served": len(served),
+        "packed_served": by_status.get(SERVED_PACKED, 0),
+        "fallback_served": by_status.get(SERVED_FALLBACK, 0),
+        "rejected_queue_full": by_status.get(REJECTED_QUEUE, 0),
+        "rejected_oversize": by_status.get(REJECTED_OVERSIZE, 0),
+        "n_launches": n_packed,
+        "mean_batch_fill": (sum(fills) / (n_packed * max_graphs)
+                            if n_packed and max_graphs else 0.0),
+        "node_slot_utilization": (nodes_used / (n_packed * node_budget)
+                                  if n_packed and node_budget else 0.0),
+        "p50_latency_s": percentile(lat, 50),
+        "p99_latency_s": percentile(lat, 99),
+        "mean_latency_s": (sum(lat) / len(lat)) if lat else float("nan"),
+        "max_latency_s": max(lat) if lat else float("nan"),
+        "graphs_per_s": len(served) / max(t1 - t0, 1e-12) if served else 0.0,
+        "makespan_s": t1 - t0,
+        "per_tenant": per_tenant,
+    }
+
+
+# ----------------------------------------------------- requests/responses --
+
+@dataclasses.dataclass(frozen=True)
+class SLOTier:
+    """``deadline_s`` is the longest a request of this tier may wait in
+    the pending queue before a launch is forced; higher ``priority``
+    packs first when the budget is contended."""
+    name: str
+    deadline_s: float
+    priority: int = 0
+
+
+DEFAULT_TIER = SLOTier("standard", 0.050, 1)
+
+#: example tenant->tier mapping used by serve.py and the benchmark
+DEFAULT_TIERS = {
+    "premium": SLOTier("premium", 0.010, 2),
+    "standard": DEFAULT_TIER,
+    "batch": SLOTier("batch", 0.500, 0),
+}
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    req_id: int
+    graph: P.Graph
+    tenant: str = "default"
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass(eq=False)
+class Response:
+    req_id: int
+    tenant: str
+    status: str
+    arrival_s: float
+    launch_s: float = float("nan")
+    complete_s: float = float("nan")
+    output: np.ndarray | None = None
+    batch_seq: int = -1
+    executor: int = -1
+
+    @property
+    def served(self) -> bool:
+        return self.status in (SERVED_PACKED, SERVED_FALLBACK)
+
+    @property
+    def latency_s(self) -> float:
+        return self.complete_s - self.arrival_s
+
+
+# -------------------------------------------------------------- executors --
+
+def constant_service(service_s: float):
+    """A fixed-shape packed program costs the same however full the batch
+    is — constant per-launch service is the honest model for it."""
+    def model(n_graphs: int, n_nodes: int, n_edges: int) -> float:
+        return float(service_s)
+    return model
+
+
+def linear_service(base_s: float, per_node_s: float = 0.0,
+                   per_edge_s: float = 0.0):
+    def model(n_graphs: int, n_nodes: int, n_edges: int) -> float:
+        return float(base_s + per_node_s * n_nodes + per_edge_s * n_edges)
+    return model
+
+
+class SimExecutor:
+    """Deterministic executor for simulation: service time from
+    ``service_model(n_graphs, n_nodes, n_edges)``; outputs from the
+    optional ``batch_fn(batch)`` / ``fallback_fn(graph)`` callables
+    (real programs in parity tests and benchmarks, ``None`` in pure
+    latency simulations such as the DSE objective)."""
+
+    def __init__(self, service_model, batch_fn=None, fallback_fn=None,
+                 allow_fallback: bool = True):
+        self.service_model = service_model
+        self.batch_fn = batch_fn
+        self.fallback_fn = fallback_fn
+        self.allow_fallback = allow_fallback
+
+    @property
+    def can_fallback(self) -> bool:
+        return self.allow_fallback
+
+    def run_batch(self, batch: dict):
+        out = self.batch_fn(batch) if self.batch_fn is not None else None
+        max_graphs = len(batch["graph_valid"])
+        n_nodes = int((batch["node_graph_id"] < max_graphs).sum())
+        n_edges = int((batch["edge_index"][:, 0] >= 0).sum())
+        svc = self.service_model(int(batch["num_graphs"]), n_nodes, n_edges)
+        return out, float(svc)
+
+    def run_fallback(self, graph: P.Graph):
+        out = self.fallback_fn(graph) if self.fallback_fn is not None \
+            else None
+        svc = self.service_model(1, graph.num_nodes, graph.num_edges)
+        return out, float(svc)
+
+
+class MeasuredExecutor:
+    """Real-execution executor: ``batch_fn``/``fallback_fn`` must block
+    until their result is ready; the measured wall-seconds become the
+    service time on the scheduler's virtual timeline. Arrivals stay
+    scripted, so the latency statistics are traffic-shaped while the
+    compute cost is the real program's."""
+
+    def __init__(self, batch_fn, fallback_fn=None):
+        self.batch_fn = batch_fn
+        self.fallback_fn = fallback_fn
+
+    @property
+    def can_fallback(self) -> bool:
+        return self.fallback_fn is not None
+
+    def run_batch(self, batch: dict):
+        t0 = time.perf_counter()
+        out = self.batch_fn(batch)
+        return out, time.perf_counter() - t0
+
+    def run_fallback(self, graph: P.Graph):
+        t0 = time.perf_counter()
+        out = self.fallback_fn(graph)
+        return out, time.perf_counter() - t0
+
+
+def plan_executor_pool(n_devices: int,
+                       shards_per_executor: int = 1) -> int:
+    """Number of parallel launch lanes a host's devices support: the
+    ``data`` axis of ``elastic.plan_mesh_shape`` with the model axis
+    standing in for devices-per-executor (a sharded executor drives a
+    whole shard group)."""
+    shape, axes = plan_mesh_shape(n_devices, model_pref=shards_per_executor)
+    return shape[axes.index("data")]
+
+
+# -------------------------------------------------------------- scheduler --
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    node_budget: int
+    edge_budget: int
+    max_graphs: int
+    #: per-tenant pending-queue bound: admissions beyond it are rejected
+    #: (backpressure), never buffered without bound
+    max_queue_depth: int = 256
+    #: tenant name -> SLOTier; unknown tenants get ``default_tier``
+    tiers: dict | None = None
+    default_tier: SLOTier = DEFAULT_TIER
+
+
+@dataclasses.dataclass(eq=False)
+class _Inflight:
+    kind: str                 # "packed" | "fallback"
+    requests: list
+    outputs: object
+    launch_s: float
+    done_s: float
+    seq: int
+
+
+@dataclasses.dataclass(eq=False)
+class _Selection:
+    requests: list            # chosen for the packed batch, pack order
+    fallback: object          # head-of-order oversize Request, or None
+    full: bool                # launch now regardless of deadlines
+
+
+class ContinuousScheduler:
+    """Event-driven continuous-batching loop over one or more executor
+    lanes. Drive it with ``submit``/``tick``/``next_event_s`` (or the
+    ``run_trace`` helper); read ``responses``/``summary()``."""
+
+    def __init__(self, cfg: SchedulerConfig, executors, clock=None,
+                 detector: StragglerDetector | None = None):
+        if not isinstance(executors, (list, tuple)):
+            executors = [executors]
+        if not executors:
+            raise ValueError("need at least one executor")
+        self.cfg = cfg
+        self.executors = list(executors)
+        self.clock = clock or VirtualClock()
+        self.detector = detector or StragglerDetector()
+        self.pending: list = []
+        self.inflight: dict = {}         # exec id -> _Inflight
+        self.responses: list = []
+        self.launches: list = []         # per-launch {seq, kind, req_ids}
+        self.retired: set = set()
+        self._depth: dict = {}           # tenant -> pending count
+        self._next_id = 0
+        self._seq = 0
+        self._fills: list = []
+        self._nodes_used = 0
+        self._flushing = False
+
+    # ------------------------------------------------------------- admission
+    def submit(self, graph: P.Graph, tenant: str = "default") -> int:
+        """Admit (or reject) one request at the clock's current time.
+        Always returns the request id; exactly one Response will
+        eventually carry it."""
+        now = self.clock.now()
+        rid = self._next_id
+        self._next_id += 1
+        fits = P.graph_fits_budget(graph, self.cfg.node_budget,
+                                   self.cfg.edge_budget)
+        if not fits and not self._can_fallback():
+            self.responses.append(Response(rid, tenant, REJECTED_OVERSIZE,
+                                           now))
+            return rid
+        if self._depth.get(tenant, 0) >= self.cfg.max_queue_depth:
+            self.responses.append(Response(rid, tenant, REJECTED_QUEUE, now))
+            return rid
+        self.pending.append(Request(rid, graph, tenant, now))
+        self._depth[tenant] = self._depth.get(tenant, 0) + 1
+        self._launch_ready(now)          # budget-full may fire immediately
+        return rid
+
+    # ----------------------------------------------------------- event loop
+    def next_event_s(self) -> float | None:
+        """Earliest time ``tick()`` would do work: the soonest in-flight
+        completion, or — when a lane is idle — the earliest pending
+        launch (now if budget-full or flushing, else the oldest
+        deadline). None when fully drained."""
+        times = [u.done_s for u in self.inflight.values()]
+        unit = self._ready_unit()
+        if unit is not None:
+            sel, _ = unit
+            if self._flushing or sel.full:
+                times.append(self.clock.now())
+            else:
+                times.append(max(self._earliest_due_s(), self.clock.now()))
+        return min(times) if times else None
+
+    def tick(self):
+        """Process everything due at the clock's current time:
+        completions first (they free lanes), then launches."""
+        now = self.clock.now()
+        self._complete_due(now)
+        self._launch_ready(now)
+
+    def drain(self):
+        """Flush: launch everything pending regardless of deadlines and
+        run the clock forward until all lanes are idle."""
+        self._flushing = True
+        try:
+            while True:
+                t = self.next_event_s()
+                if t is None:
+                    break
+                self.clock.advance_to(t)
+                self.tick()
+        finally:
+            self._flushing = False
+
+    def summary(self) -> dict:
+        s = summarize(self.responses, fills=self._fills,
+                      max_graphs=self.cfg.max_graphs,
+                      node_budget=self.cfg.node_budget,
+                      nodes_used=self._nodes_used)
+        s["retired_executors"] = sorted(self.retired)
+        return s
+
+    # -------------------------------------------------------------- internal
+    def _tier(self, tenant: str) -> SLOTier:
+        return (self.cfg.tiers or {}).get(tenant, self.cfg.default_tier)
+
+    def _active(self):
+        return [i for i in range(len(self.executors))
+                if i not in self.retired]
+
+    def _launch_lane(self, sel) -> int | None:
+        """Lowest idle active lane able to run the unit (fallback units
+        need a fallback-capable executor)."""
+        for i in self._active():
+            if i in self.inflight:
+                continue
+            if sel.fallback is not None and not getattr(
+                    self.executors[i], "can_fallback", False):
+                continue
+            return i
+        return None
+
+    def _ready_unit(self):
+        """(selection, lane) for the next launchable unit, or None. When
+        the head-of-order oversize request has no idle fallback-capable
+        lane, packed work behind it may still launch."""
+        if not self.pending:
+            return None
+        sel = self._select()
+        lane = self._launch_lane(sel)
+        if lane is None and sel.fallback is not None:
+            sel = self._select(skip_head_oversize=True)
+            lane = self._launch_lane(sel) if sel.requests else None
+        if lane is None or (sel.fallback is None and not sel.requests):
+            return None
+        return sel, lane
+
+    def _can_fallback(self) -> bool:
+        return any(getattr(self.executors[i], "can_fallback", False)
+                   for i in self._active())
+
+    def _oversize(self, g: P.Graph) -> bool:
+        return not P.graph_fits_budget(g, self.cfg.node_budget,
+                                       self.cfg.edge_budget)
+
+    def _ordered_pending(self) -> list:
+        return sorted(self.pending,
+                      key=lambda r: (-self._tier(r.tenant).priority,
+                                     r.arrival_s, r.req_id))
+
+    def _earliest_due_s(self) -> float:
+        return min(r.arrival_s + self._tier(r.tenant).deadline_s
+                   for r in self.pending)
+
+    def _select(self, skip_head_oversize: bool = False) -> _Selection:
+        """First-fit scan of the pending queue in (priority, arrival)
+        order. An oversize request at the head of the order becomes a
+        dedicated fallback launch; oversize requests further back wait
+        (they cannot share a batch). A fitting-class request blocked by
+        the remaining budget marks the batch *full* — it re-packs into
+        the next launch (the straggler rule)."""
+        order = self._ordered_pending()
+        if (not skip_head_oversize and order
+                and self._oversize(order[0].graph)):
+            return _Selection([], order[0], True)
+        sel: list = []
+        n_used = e_used = 0
+        full = False
+        for r in order:
+            if self._oversize(r.graph):
+                continue
+            if len(sel) == self.cfg.max_graphs:
+                full = True
+                break
+            if (n_used + r.graph.num_nodes <= self.cfg.node_budget
+                    and e_used + r.graph.num_edges <= self.cfg.edge_budget):
+                sel.append(r)
+                n_used += r.graph.num_nodes
+                e_used += r.graph.num_edges
+            else:
+                full = True
+        return _Selection(sel, None, full or len(sel) == self.cfg.max_graphs)
+
+    def _launch_ready(self, now: float):
+        while True:
+            unit = self._ready_unit()
+            if unit is None:
+                return
+            sel, lane = unit
+            due = (self._flushing or sel.full
+                   or self._earliest_due_s() <= now)
+            if not due:
+                return
+            self._launch(lane, sel, now)
+
+    def _remove_pending(self, req: Request):
+        self.pending.remove(req)
+        self._depth[req.tenant] -= 1
+
+    def _launch(self, exec_id: int, sel: _Selection, now: float):
+        executor = self.executors[exec_id]
+        if sel.fallback is not None:
+            req = sel.fallback
+            self._remove_pending(req)
+            out, svc = executor.run_fallback(req.graph)
+            unit = _Inflight("fallback", [req], out, now, now + svc,
+                             self._seq)
+        else:
+            reqs = sel.requests
+            for r in reqs:
+                self._remove_pending(r)
+            batch, k = P.pack_graphs([r.graph for r in reqs],
+                                     self.cfg.node_budget,
+                                     self.cfg.edge_budget,
+                                     self.cfg.max_graphs)
+            assert k == len(reqs), "selection must fit the budgets"
+            out, svc = executor.run_batch(batch)
+            unit = _Inflight("packed", reqs, out, now, now + svc, self._seq)
+            self._fills.append(len(reqs))
+            self._nodes_used += sum(r.graph.num_nodes for r in reqs)
+        self.launches.append({"seq": self._seq, "kind": unit.kind,
+                              "executor": exec_id,
+                              "req_ids": [r.req_id for r in unit.requests]})
+        self.inflight[exec_id] = unit
+        self._seq += 1
+
+    def _complete_due(self, now: float):
+        while True:
+            due = [(u.done_s, ex) for ex, u in self.inflight.items()
+                   if u.done_s <= now]
+            if not due:
+                return
+            _, ex = min(due)
+            u = self.inflight.pop(ex)
+            status = SERVED_PACKED if u.kind == "packed" else SERVED_FALLBACK
+            for k, r in enumerate(u.requests):
+                out = None
+                if u.outputs is not None:
+                    arr = np.asarray(u.outputs)
+                    out = arr[k] if u.kind == "packed" else arr
+                self.responses.append(Response(
+                    r.req_id, r.tenant, status, r.arrival_s, u.launch_s,
+                    u.done_s, out, u.seq, ex))
+            self.detector.record(f"exec{ex}", u.done_s - u.launch_s)
+            self._apply_health_actions()
+
+    def _apply_health_actions(self):
+        """Straggler policy: a lane flagged ``evict`` by the detector is
+        retired — no new launches land on it, so its future work
+        re-packs onto the healthy lanes. The last active lane is never
+        retired."""
+        for host, action in self.detector.check().items():
+            if action != "evict" or not host.startswith("exec"):
+                continue
+            i = int(host[len("exec"):])
+            if i not in self.retired and len(self._active()) > 1:
+                self.retired.add(i)
+
+
+# ------------------------------------------------------------- simulation --
+
+def poisson_trace(n: int, load_graphs_per_s: float,
+                  ds_cfg: P.GraphDataConfig, seed: int = 0,
+                  tenants=(("default", 1.0),)) -> list:
+    """Open-loop Poisson arrival trace: ``n`` (time, graph, tenant)
+    tuples with exponential inter-arrivals at the offered load, graphs
+    drawn deterministically from ``ds_cfg``, tenants sampled from the
+    (name, weight) mixture. Same (seed, cfg) -> same trace, always."""
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 0x5E44]))
+    names = [t for t, _ in tenants]
+    w = np.array([p for _, p in tenants], float)
+    w = w / w.sum()
+    t = 0.0
+    trace = []
+    for i in range(n):
+        t += float(rng.exponential(1.0 / load_graphs_per_s))
+        tenant = names[int(rng.choice(len(names), p=w))]
+        trace.append((t, P.make_graph(ds_cfg, i), tenant))
+    return trace
+
+
+def run_trace(sched: ContinuousScheduler, trace) -> list:
+    """Drive an arrival trace (iterable of (time, graph, tenant), sorted
+    by time) through the scheduler to completion; returns the response
+    list. Purely event-driven: the clock jumps between arrivals,
+    deadline expiries, and completions — never sleeps."""
+    ordered = sorted(enumerate(trace), key=lambda p: (p[1][0], p[0]))
+    for _, (t, graph, tenant) in ordered:
+        while True:
+            e = sched.next_event_s()
+            if e is None or e > t:
+                break
+            sched.clock.advance_to(e)
+            sched.tick()
+        sched.clock.advance_to(t)
+        sched.submit(graph, tenant)
+    sched.drain()
+    return sched.responses
+
+
+def simulate_wave_drain(trace, cfg: SchedulerConfig, executor):
+    """Virtual-time oracle of ``launch.serve.drain_gnn_queue`` under an
+    arrival process: wait until ``cfg.max_graphs`` requests have arrived
+    (the wave window), pack the window, run its batches back-to-back,
+    repeat; the final partial window flushes at end of trace. Uses the
+    same Response accounting and ``summarize`` as the continuous
+    scheduler, so the two are directly comparable. Returns
+    (responses, summary)."""
+    responses: list = []
+    fills: list = []
+    nodes_used = 0
+    busy = 0.0
+    seq = 0
+
+    def run_window(reqs, now):
+        nonlocal busy, seq, nodes_used
+        fit = [r for r in reqs if P.graph_fits_budget(
+            r.graph, cfg.node_budget, cfg.edge_budget)]
+        over = [r for r in reqs if r not in fit]
+        batches, dropped = P.pack_dataset(
+            [r.graph for r in fit], cfg.node_budget, cfg.edge_budget,
+            cfg.max_graphs)
+        assert not dropped
+        t = max(now, busy)
+        i = 0
+        for b in batches:
+            k = int(b["num_graphs"])
+            out, svc = executor.run_batch(b)
+            done = t + svc
+            for j, r in enumerate(fit[i:i + k]):
+                row = None if out is None else np.asarray(out)[j]
+                responses.append(Response(r.req_id, r.tenant, SERVED_PACKED,
+                                          r.arrival_s, t, done, row, seq))
+            fills.append(k)
+            nodes_used += sum(r.graph.num_nodes for r in fit[i:i + k])
+            i += k
+            t = done
+            seq += 1
+        for r in over:
+            if getattr(executor, "can_fallback", False):
+                out, svc = executor.run_fallback(r.graph)
+                done = t + svc
+                row = None if out is None else np.asarray(out)
+                responses.append(Response(r.req_id, r.tenant,
+                                          SERVED_FALLBACK, r.arrival_s, t,
+                                          done, row, seq))
+                t = done
+                seq += 1
+            else:
+                responses.append(Response(r.req_id, r.tenant,
+                                          REJECTED_OVERSIZE, r.arrival_s))
+        busy = t
+
+    window: list = []
+    last_t = 0.0
+    ordered = sorted(enumerate(trace), key=lambda p: (p[1][0], p[0]))
+    for rid, (t, graph, tenant) in ordered:
+        window.append(Request(rid, graph, tenant, t))
+        last_t = t
+        if len(window) >= cfg.max_graphs:
+            run_window(window, t)
+            window = []
+    if window:
+        run_window(window, last_t)
+    return responses, summarize(responses, fills=fills,
+                                max_graphs=cfg.max_graphs,
+                                node_budget=cfg.node_budget,
+                                nodes_used=nodes_used)

@@ -121,3 +121,28 @@ def test_features_default_tiles_for_old_databases():
     assert len(v) == len(PM.FEATURE_NAMES)
     assert v[PM.FEATURE_NAMES.index("edge_block")] == 128
     assert v[PM.FEATURE_NAMES.index("node_block")] == 128
+
+
+def test_explore_p99_latency_objective():
+    """The SLO-aware objective simulates top candidates through the
+    continuous scheduler and reports traffic-shaped percentiles."""
+    models = dse.fit_models(_db())
+    slo = {"load_graphs_per_s": 512.0, "deadline_s": 0.02,
+           "n_requests": 48, "top_k": 4}
+    best = dse.explore(models, n_candidates=32, seed=1,
+                       memory_budget=1e18, objective="p99_latency",
+                       slo=slo)
+    assert best["feasible"] is True
+    assert best["objective"] == "p99_latency"
+    assert best["pred_p99_latency_s"] >= best["pred_p50_latency_s"] > 0
+    assert 0 < best["pred_batch_fill"] <= 1.0
+    assert best["pred_rejected"] == 0
+    assert best["slo"]["n_requests"] == 48
+
+
+def test_explore_rejects_unknown_objective():
+    import pytest
+    models = dse.fit_models(_db())
+    with pytest.raises(ValueError):
+        dse.explore(models, n_candidates=8, seed=1,
+                    memory_budget=1e18, objective="p42")

@@ -33,14 +33,66 @@ def test_straggler_recovers():
     assert det.check() == {}
 
 
+def test_straggler_threshold_is_strict():
+    """A host sitting exactly at threshold x median is healthy; only
+    strictly above is flagged."""
+    det = StragglerDetector(threshold=1.5)
+    for h, v in (("h0", 1.0), ("h1", 1.0), ("h2", 1.5)):
+        det.record(h, v)                    # first sample -> ema = v
+    assert det.median_ema() == 1.0
+    assert det.check() == {}                # 1.5 == 1.5 * median: healthy
+    det2 = StragglerDetector(threshold=1.5)
+    for h, v in (("h0", 1.0), ("h1", 1.0), ("h2", 1.5 + 1e-9)):
+        det2.record(h, v)
+    assert det2.check() == {"h2": "reshard_input"}
+
+
+def test_straggler_decay_edges():
+    frozen = StragglerDetector(decay=1.0)   # ema pinned to first sample
+    frozen.record("h", 1.0)
+    for _ in range(5):
+        frozen.record("h", 100.0)
+    assert frozen.hosts["h"].ema == 1.0
+    latest = StragglerDetector(decay=0.0)   # ema tracks latest sample
+    latest.record("h", 1.0)
+    latest.record("h", 7.0)
+    assert latest.hosts["h"].ema == 7.0
+
+
+def test_straggler_empty_check():
+    assert StragglerDetector().check() == {}
+
+
 @pytest.mark.parametrize("n,model,want", [
     (512, 16, ((32, 16), ("data", "model"))),
     (496, 16, ((31, 16), ("data", "model"))),    # lost a host of 16
     (250, 16, ((125, 2), ("data", "model"))),
     (7, 16, ((7, 1), ("data", "model"))),
+    (1, 16, ((1, 1), ("data", "model"))),        # single survivor
 ])
 def test_plan_mesh_shape(n, model, want):
     assert plan_mesh_shape(n, model) == want
+
+
+@pytest.mark.parametrize("n", [0, -3])
+def test_plan_mesh_shape_rejects_empty(n):
+    with pytest.raises(ValueError):
+        plan_mesh_shape(n)
+
+
+def test_plan_mesh_shape_pod_axis():
+    assert plan_mesh_shape(512, 16, pod=4) \
+        == ((4, 8, 16), ("pod", "data", "model"))
+    # pod not dividing the data axis falls back to the 2-axis grid
+    assert plan_mesh_shape(512, 16, pod=3) \
+        == ((32, 16), ("data", "model"))
+
+
+def test_replan_single_device():
+    from repro.runtime.elastic import replan
+    mesh = replan(jax.devices()[:1])
+    assert mesh.devices.shape == (1, 1)
+    assert mesh.axis_names == ("data", "model")
 
 
 # ---------------------------------------------------------------- trainer --

@@ -1,0 +1,412 @@
+"""Continuous-batching scheduler: deterministic virtual-clock tests.
+
+Everything here runs on the injected ``VirtualClock`` — closed-form
+latency assertions, scripted launch policies, straggler eviction, and
+randomized exactly-once sweeps all replay bit-identically with zero
+sleeps. The property tests run twice: seeded numpy sweeps always, and
+hypothesis-driven versions when hypothesis is installed (guarded
+import; the container image does not ship it).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.data import pipeline as P
+from repro.runtime import scheduler as S
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAS_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+DS = P.GraphDataConfig(avg_nodes=8, avg_degree=2, node_feat_dim=5,
+                       edge_feat_dim=3, max_nodes=64, max_edges=64, seed=3)
+
+
+def sized(idx: int, n_nodes: int, n_edges: int = 4) -> P.Graph:
+    """A graph with exact accounting sizes (contents irrelevant to the
+    pure-latency tests, which run with batch_fn=None)."""
+    g = P.make_graph(DS, idx)
+    return dataclasses.replace(g, num_nodes=n_nodes, num_edges=n_edges)
+
+
+def sim_sched(service: float = 1.0, *, max_graphs: int = 4,
+              node_budget: int = 1000, edge_budget: int = 1000,
+              deadline: float = 0.25, depth: int = 256, n_lanes: int = 1,
+              allow_fallback: bool = True, tiers=None,
+              service_per_lane=None) -> S.ContinuousScheduler:
+    cfg = S.SchedulerConfig(node_budget, edge_budget, max_graphs,
+                            max_queue_depth=depth, tiers=tiers,
+                            default_tier=S.SLOTier("standard", deadline, 1))
+    svcs = service_per_lane or [service] * n_lanes
+    lanes = [S.SimExecutor(S.constant_service(s),
+                           allow_fallback=allow_fallback) for s in svcs]
+    return S.ContinuousScheduler(cfg, lanes)
+
+
+# ---------------------------------------------------------------- metrics --
+
+def test_percentile_nearest_rank():
+    v = list(range(1, 11))
+    assert S.percentile(v, 50) == 5.0       # ceil(0.50 * 10) = 5th
+    assert S.percentile(v, 90) == 9.0
+    assert S.percentile(v, 99) == 10.0      # ceil(0.99 * 10) = 10th
+    assert S.percentile(v, 100) == 10.0
+    assert S.percentile([7.0], 1) == 7.0
+    assert S.percentile([7.0], 99) == 7.0
+    assert S.percentile([3.0, 1.0, 2.0], 50) == 2.0
+    assert np.isnan(S.percentile([], 50))
+
+
+def test_summarize_empty():
+    s = S.summarize([])
+    assert s["served"] == 0
+    assert s["graphs_per_s"] == 0.0
+    assert np.isnan(s["p50_latency_s"])
+
+
+def test_virtual_clock_monotonic():
+    c = S.VirtualClock(1.0)
+    assert c.now() == 1.0
+    c.advance_to(2.5)
+    assert c.now() == 2.5
+    with pytest.raises(ValueError):
+        c.advance_to(1.0)
+
+
+# ---------------------------------------------------------- launch policy --
+
+def test_closed_form_burst_latency():
+    """10 simultaneous arrivals, max_graphs=4, service 1.0, deadline
+    0.25: batch 4 launches at t=0 (budget-full), batch 4 at t=1, batch 2
+    at t=2 -> latencies [1 x4, 2 x4, 3 x2], every figure closed-form."""
+    sched = sim_sched(1.0, max_graphs=4, deadline=0.25)
+    trace = [(0.0, P.make_graph(DS, i), "default") for i in range(10)]
+    S.run_trace(sched, trace)
+    s = sched.summary()
+    assert s["n_launches"] == 3
+    assert [len(l["req_ids"]) for l in sched.launches] == [4, 4, 2]
+    lat = sorted(r.latency_s for r in sched.responses)
+    assert lat == pytest.approx([1.0] * 4 + [2.0] * 4 + [3.0] * 2)
+    assert s["p50_latency_s"] == pytest.approx(2.0)
+    assert s["p99_latency_s"] == pytest.approx(3.0)
+    assert s["mean_latency_s"] == pytest.approx(1.8)
+    assert s["mean_batch_fill"] == pytest.approx(10 / 12)
+    assert s["graphs_per_s"] == pytest.approx(10 / 3)
+
+
+def test_deadline_expiry_fires_launch():
+    """A lone request launches when its tier deadline expires — latency
+    is exactly deadline + service on the virtual clock."""
+    sched = sim_sched(1.0, deadline=0.25)
+    sched.submit(P.make_graph(DS, 0))
+    assert sched.next_event_s() == pytest.approx(0.25)
+    sched.clock.advance_to(0.25)
+    sched.tick()
+    assert sched.inflight and not sched.pending
+    sched.drain()
+    assert sched.responses[0].latency_s == pytest.approx(1.25)
+
+
+def test_budget_full_fires_before_deadline():
+    sched = sim_sched(1.0, max_graphs=4, deadline=10.0)
+    for i in range(4):
+        sched.submit(P.make_graph(DS, i))
+    assert sched.inflight, "max_graphs reached must launch immediately"
+    sched.drain()
+    assert all(r.latency_s == pytest.approx(1.0) for r in sched.responses)
+
+
+def test_blocked_request_repacks_into_next_launch():
+    """Node budget fits two 10-node graphs; the third marks the batch
+    full (immediate launch) and re-packs into the next one — the
+    straggler rule."""
+    sched = sim_sched(1.0, max_graphs=8, node_budget=25, deadline=10.0)
+    for i in range(3):
+        sched.submit(sized(i, 10))
+    sched.drain()
+    assert [l["req_ids"] for l in sched.launches] == [[0, 1], [2]]
+    r2 = next(r for r in sched.responses if r.req_id == 2)
+    assert r2.batch_seq == 1 and r2.status == S.SERVED_PACKED
+
+
+def test_slo_priority_packs_premium_first():
+    """Premium outranks earlier-arrived standard traffic when the node
+    budget is contended."""
+    sched = sim_sched(1.0, max_graphs=8, node_budget=25, deadline=10.0,
+                      tiers=S.DEFAULT_TIERS)
+    sched.submit(sized(0, 10), tenant="standard")
+    sched.submit(sized(1, 10), tenant="standard")
+    sched.submit(sized(2, 10), tenant="premium")   # contends -> full
+    sched.drain()
+    assert sched.launches[0]["req_ids"] == [2, 0]
+    assert sched.launches[1]["req_ids"] == [1]
+
+
+def test_backpressure_rejects_beyond_queue_depth():
+    sched = sim_sched(1.0, max_graphs=8, deadline=10.0, depth=2)
+    for i in range(5):
+        sched.submit(P.make_graph(DS, i))
+    sched.drain()
+    s = sched.summary()
+    assert s["served"] == 2
+    assert s["rejected_queue_full"] == 3
+    assert s["per_tenant"]["default"]["rejected"] == 3
+    assert sorted(r.req_id for r in sched.responses) == list(range(5))
+
+
+def test_oversize_fallback_vs_rejection():
+    big = sized(0, 40)
+    served = sim_sched(1.0, node_budget=20, allow_fallback=True)
+    served.submit(big)
+    served.drain()
+    assert served.responses[0].status == S.SERVED_FALLBACK
+    rejected = sim_sched(1.0, node_budget=20, allow_fallback=False)
+    rejected.submit(big)
+    assert rejected.responses[0].status == S.REJECTED_OVERSIZE
+
+
+def test_oversize_head_does_not_starve_packed_work():
+    """Head-of-order oversize waiting for the only fallback-capable lane
+    (busy) must not block packed launches on the other lane."""
+    cfg = S.SchedulerConfig(20, 1000, 1, default_tier=S.SLOTier("s", 10.0))
+    lanes = [S.SimExecutor(S.constant_service(1.0), allow_fallback=True),
+             S.SimExecutor(S.constant_service(1.0), allow_fallback=False)]
+    sched = S.ContinuousScheduler(cfg, lanes)
+    sched.submit(sized(0, 10))    # lane 0 busy (fallback-capable)
+    sched.submit(sized(1, 40))    # oversize head, needs lane 0
+    sched.submit(sized(2, 10))    # must ride lane 1 meanwhile
+    assert [(l["req_ids"], l["executor"]) for l in sched.launches] \
+        == [([0], 0), ([2], 1)]
+    sched.drain()
+    fb = next(r for r in sched.responses if r.req_id == 1)
+    assert fb.status == S.SERVED_FALLBACK and fb.executor == 0
+
+
+# -------------------------------------------------------------- stragglers --
+
+def test_straggler_eviction_retires_slow_lane():
+    """A lane 10x slower than its peer is flagged by the detector and
+    retired; its would-have-been work re-packs onto the healthy lane."""
+    sched = sim_sched(max_graphs=1, deadline=0.0, n_lanes=2,
+                      service_per_lane=[0.01, 0.1])
+    for i in range(40):
+        sched.submit(P.make_graph(DS, i))
+    sched.drain()
+    assert sched.retired == {1}
+    assert sorted(r.req_id for r in sched.responses) == list(range(40))
+    slow = [l for l in sched.launches if l["executor"] == 1]
+    assert 1 <= len(slow) <= 3, "slow lane retired after a few launches"
+    last_seq = max(l["seq"] for l in slow)
+    assert all(l["executor"] == 0 for l in sched.launches
+               if l["seq"] > last_seq)
+
+
+def test_last_lane_is_never_retired():
+    sched = sim_sched(1.0, max_graphs=1, deadline=0.0)
+    for i in range(20):
+        sched.submit(P.make_graph(DS, i))
+    sched.drain()
+    assert sched.retired == set()
+    assert len(sched.responses) == 20
+
+
+def test_plan_executor_pool():
+    assert S.plan_executor_pool(1) == 1
+    assert S.plan_executor_pool(8) == 8
+    assert S.plan_executor_pool(8, shards_per_executor=2) == 4
+    assert S.plan_executor_pool(8, shards_per_executor=16) == 1
+
+
+# ----------------------------------------------------- exactly-once sweeps --
+
+def _exactly_once_body(seed: int, n: int, load: float, depth: int,
+                       oversize_every: int, allow_fallback: bool):
+    """Every submitted request gets exactly one Response, statuses
+    partition, and oversize routes to fallback or explicit rejection."""
+    node_budget = 64
+    sched = sim_sched(0.01, max_graphs=4, node_budget=node_budget,
+                      deadline=0.02, depth=depth,
+                      allow_fallback=allow_fallback)
+    trace = S.poisson_trace(n, load, DS, seed=seed,
+                            tenants=(("premium", 0.2), ("standard", 0.5),
+                                     ("batch", 0.3)))
+    trace = [(t, dataclasses.replace(g, num_nodes=node_budget + 5)
+              if i % oversize_every == 0 else g, tn)
+             for i, (t, g, tn) in enumerate(trace)]
+    S.run_trace(sched, trace)
+    assert sorted(r.req_id for r in sched.responses) == list(range(n))
+    s = sched.summary()
+    assert s["served"] + s["rejected_queue_full"] \
+        + s["rejected_oversize"] == n
+    if not allow_fallback:
+        assert s["fallback_served"] == 0
+        oversize_ids = set(range(0, n, oversize_every))
+        for r in sched.responses:
+            if r.req_id in oversize_ids:
+                assert r.status == S.REJECTED_OVERSIZE
+    else:
+        assert s["rejected_oversize"] == 0
+
+
+def test_exactly_once_randomized_sweep():
+    rng = np.random.default_rng(0)
+    for seed in range(12):
+        _exactly_once_body(seed, n=int(rng.integers(1, 60)),
+                           load=float(rng.uniform(10, 400)),
+                           depth=int(rng.integers(1, 8)),
+                           oversize_every=int(rng.integers(2, 9)),
+                           allow_fallback=bool(seed % 2))
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=hst.integers(0, 2**16), n=hst.integers(1, 50),
+           load=hst.floats(1.0, 500.0), depth=hst.integers(1, 8),
+           oversize_every=hst.integers(2, 10),
+           allow_fallback=hst.booleans())
+    def test_exactly_once_hypothesis(seed, n, load, depth,
+                                     oversize_every, allow_fallback):
+        _exactly_once_body(seed, n, load, depth, oversize_every,
+                           allow_fallback)
+else:
+    @needs_hypothesis
+    def test_exactly_once_hypothesis():
+        pass  # covered by test_exactly_once_randomized_sweep above
+
+
+def test_poisson_trace_deterministic():
+    a = S.poisson_trace(16, 100.0, DS, seed=7)
+    b = S.poisson_trace(16, 100.0, DS, seed=7)
+    assert [t for t, _, _ in a] == [t for t, _, _ in b]
+    assert [tn for _, _, tn in a] == [tn for _, _, tn in b]
+    c = S.poisson_trace(16, 100.0, DS, seed=8)
+    assert [t for t, _, _ in a] != [t for t, _, _ in c]
+
+
+# ------------------------------------------------- real-model parity (jax) --
+
+def _small_model():
+    import jax
+
+    from repro.configs.gnn import DATASETS, config
+    from repro.core import gnn_model as G
+    from repro.nn import param as prm
+    cfg = config("gcn", reduced=True)
+    ds = DATASETS["qm9"]
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+    fn = jax.jit(lambda p, b: G.apply_packed(p, cfg, b))
+    fb = jax.jit(lambda p, el: G.apply(p, cfg, el))
+    return ds, cfg, params, fn, fb
+
+
+def _real_executor(params, fn, fb, service=0.01):
+    import jax
+
+    from repro.core import gnn_model as G
+
+    def batch_fn(batch):
+        return np.asarray(jax.block_until_ready(
+            fn(params, G.packed_to_device(batch))))
+
+    def fallback_fn(g):
+        el = {"node_feat": np.asarray(g.node_feat),
+              "edge_index": np.asarray(g.edge_index),
+              "edge_feat": np.asarray(g.edge_feat),
+              "num_nodes": np.int32(g.num_nodes)}
+        return np.asarray(jax.block_until_ready(fb(params, el)))
+
+    return S.SimExecutor(S.constant_service(service), batch_fn=batch_fn,
+                         fallback_fn=fallback_fn)
+
+
+def test_output_parity_with_offline_apply_packed():
+    """Bitwise: each launch's outputs equal re-running the identical
+    batch composition offline through apply_packed (and each fallback
+    equals the padded per-graph oracle)."""
+    from repro.core import gnn_model as G
+    from repro.data import pipeline as P2
+
+    ds, cfg, params, fn, fb = _small_model()
+    nb = P2.size_budget(4, ds.avg_nodes)
+    eb = P2.size_budget(4, ds.avg_nodes * ds.avg_degree)
+    scfg = S.SchedulerConfig(nb, eb, 4,
+                             default_tier=S.SLOTier("s", 0.02, 1))
+    sched = S.ContinuousScheduler(scfg, _real_executor(params, fn, fb))
+    trace = S.poisson_trace(20, 300.0, ds, seed=1)
+    # force one fallback launch into the mix
+    t, g, tn = trace[7]
+    trace[7] = (t, dataclasses.replace(g, num_nodes=nb + 1), tn)
+    S.run_trace(sched, trace)
+    gmap = {i: g for i, (_, g, _) in enumerate(trace)}
+    out = {r.req_id: r for r in sched.responses}
+    assert sorted(out) == list(range(20))
+    for launch in sched.launches:
+        if launch["kind"] == "packed":
+            batch, k = P2.pack_graphs([gmap[r] for r in launch["req_ids"]],
+                                      nb, eb, 4)
+            assert k == len(launch["req_ids"])
+            import jax
+            ref = np.asarray(jax.block_until_ready(
+                fn(params, G.packed_to_device(batch))))
+            for j, rid in enumerate(launch["req_ids"]):
+                assert np.array_equal(ref[j], out[rid].output)
+        else:
+            (rid,) = launch["req_ids"]
+            assert out[rid].status == S.SERVED_FALLBACK
+
+
+def test_packing_order_invariance():
+    """The same six graphs submitted in opposite orders land in one
+    batch each; every graph's output matches across the two pack
+    orders."""
+    ds, cfg, params, fn, fb = _small_model()
+    from repro.data import pipeline as P2
+    nb = P2.size_budget(8, ds.avg_nodes)
+    eb = P2.size_budget(8, ds.avg_nodes * ds.avg_degree)
+    graphs = [P2.make_graph(ds, i) for i in range(6)]
+
+    def run(order):
+        scfg = S.SchedulerConfig(nb, eb, 8,
+                                 default_tier=S.SLOTier("s", 10.0, 1))
+        sched = S.ContinuousScheduler(scfg,
+                                      _real_executor(params, fn, fb))
+        for g in order:
+            sched.submit(g)
+        sched.drain()
+        assert len(sched.launches) == 1
+        return {id(order[r.req_id]): r.output for r in sched.responses}
+
+    fwd = run(graphs)
+    rev = run(list(reversed(graphs)))
+    for g in graphs:
+        np.testing.assert_allclose(fwd[id(g)], rev[id(g)],
+                                   rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------- continuous vs wave baseline --
+
+def test_continuous_beats_wave_p99():
+    """At a load where the wave window takes much longer to fill than
+    the deadline, continuous batching must cut p99 without losing
+    requests."""
+    cfg = S.SchedulerConfig(1000, 1000, 8,
+                            default_tier=S.SLOTier("s", 0.02, 1))
+    trace = S.poisson_trace(64, 100.0, DS, seed=2)
+
+    def executor():
+        return S.SimExecutor(S.constant_service(0.005))
+
+    sched = S.ContinuousScheduler(cfg, executor())
+    S.run_trace(sched, trace)
+    cs = sched.summary()
+    _, ws = S.simulate_wave_drain(trace, cfg, executor())
+    assert cs["served"] == ws["served"] == 64
+    assert cs["p99_latency_s"] < ws["p99_latency_s"]
+    assert cs["p50_latency_s"] < ws["p50_latency_s"]
