@@ -347,18 +347,22 @@ def _explore_slo(cands, lat, mem, thr, order, memory_budget, slo,
             d, service_s, trace, deadline_s=float(slo["deadline_s"]),
             max_queue_depth=int(slo["max_queue_depth"]))
         # a design that sheds load cannot win on the latency of the
-        # requests it deigned to answer: rejections disqualify first
-        key = (summary["rejected_queue_full"], summary["p99_latency_s"])
+        # requests it deigned to answer: rejections disqualify first.
+        # p99 is None when the design served nothing at all — rank that
+        # as infinitely bad rather than letting the tuple compare fail
+        p99 = summary["p99_latency_s"]
+        key = (summary["rejected_queue_full"],
+               float("inf") if p99 is None else p99)
         if best_summary is None or key < (
                 best_summary["rejected_queue_full"], best_p99):
-            best_i, best_p99, best_summary = i, summary["p99_latency_s"], \
-                summary
+            best_i, best_p99, best_summary = i, key[1], summary
     best = result(best_i, feasible)
     if not feasible:
         best["memory_violation_bytes"] = float(mem[best_i] - memory_budget)
     best["objective"] = "p99_latency"
     best["pred_p99_latency_s"] = float(best_p99)
-    best["pred_p50_latency_s"] = float(best_summary["p50_latency_s"])
+    p50 = best_summary["p50_latency_s"]
+    best["pred_p50_latency_s"] = float("inf") if p50 is None else float(p50)
     best["pred_batch_fill"] = float(best_summary["mean_batch_fill"])
     best["pred_rejected"] = int(best_summary["rejected_queue_full"])
     best["slo"] = dict(slo)

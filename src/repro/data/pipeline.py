@@ -137,6 +137,50 @@ def graph_fits_budget(g: Graph, node_budget: int, edge_budget: int) -> bool:
     return g.num_nodes <= node_budget and g.num_edges <= edge_budget
 
 
+def validate_graph(g: Graph) -> str | None:
+    """Admission guard for externally-supplied graphs: returns ``None``
+    for a well-formed ``Graph``, else a human-readable reason string.
+
+    ``pack_graphs`` trusts its inputs — it adds the node-slot offset to
+    every active edge row, so a negative or out-of-range endpoint
+    silently corrupts a *neighboring* graph's rows in the packed batch,
+    and a NaN feature poisons the whole launch. Serving paths
+    (``launch.serve`` admission, ``SchedulerConfig.validate``) call this
+    to reject such inputs explicitly (status ``rejected_invalid``)
+    before they reach a batch. Checks the *active* prefixes only:
+    padding rows (edge src == -1, zeroed features) are the format's own
+    and are not screened."""
+    nf = np.asarray(g.node_feat)
+    ei = np.asarray(g.edge_index)
+    ef = np.asarray(g.edge_feat)
+    if nf.ndim != 2:
+        return f"node_feat must be 2-D (max_nodes, F), got shape {nf.shape}"
+    if ei.ndim != 2 or ei.shape[1] != 2:
+        return f"edge_index must be (max_edges, 2), got shape {ei.shape}"
+    if ef.ndim != 2:
+        return f"edge_feat must be 2-D (max_edges, Fe), got shape {ef.shape}"
+    if ef.shape[0] != ei.shape[0]:
+        return (f"edge_feat has {ef.shape[0]} rows but edge_index has "
+                f"{ei.shape[0]}")
+    n, e = int(g.num_nodes), int(g.num_edges)
+    if not 0 <= n <= nf.shape[0]:
+        return (f"num_nodes={n} outside [0, {nf.shape[0]}] "
+                "(node_feat rows)")
+    if not 0 <= e <= ei.shape[0]:
+        return (f"num_edges={e} outside [0, {ei.shape[0]}] "
+                "(edge_index rows)")
+    active = ei[:e]
+    if active.size and (active.min() < 0 or active.max() >= n):
+        bad = int(np.argmax((active < 0).any(1) | (active >= n).any(1)))
+        return (f"edge {bad} endpoints {tuple(int(v) for v in active[bad])} "
+                f"out of range for num_nodes={n}")
+    if not np.isfinite(nf[:n]).all():
+        return "non-finite node features in the active prefix"
+    if not np.isfinite(ef[:e]).all():
+        return "non-finite edge features in the active prefix"
+    return None
+
+
 def empty_graph_batch(node_budget: int, edge_budget: int, max_graphs: int,
                       node_feat_dim: int, edge_feat_dim: int,
                       num_targets: int = 1) -> dict:

@@ -7,9 +7,13 @@ LM mode (default): prefill + decode loop with donated KV caches.
 
 GNN mode (--gnn): drains a graph request queue through fixed-shape packed
 GraphBatch programs — one jitted program, budget-sized buffers, reported
-in graphs/s (DESIGN_BATCHING.md). Requests too large for the packed
-budgets are answered through the padded per-graph oracle instead of being
-dropped (fallback count lands in stats). ``--precision`` serves through
+in graphs/s (DESIGN_BATCHING.md). Admission mirrors the continuous
+scheduler's statuses: malformed graphs are rejected explicitly
+(``rejected_invalid``, data.pipeline.validate_graph), and requests too
+large for the packed budgets are answered through the padded per-graph
+oracle — or, with no fallback program, get per-request
+``rejected_oversize`` outcomes, never a silent drop. ``--precision``
+serves through
 a low-precision PrecisionPolicy datapath (bf16 / int8 tiles, fp32
 accumulation; int8 grids are max-abs calibrated on the warmup batch) and
 reports the output error vs the fp32 program next to the throughput.
@@ -68,6 +72,56 @@ def _fallback_input(g) -> dict:
             "num_nodes": jnp.int32(g.num_nodes)}
 
 
+def _admit(queue, node_budget: int, edge_budget: int, *,
+           can_fallback: bool, validate: bool = True):
+    """Admission screen of the wave drains, mirroring the continuous
+    scheduler's ``submit``: every request is routed to exactly one
+    outcome up front — packable, oversize-via-fallback, or an explicit
+    per-request rejection (``rejected_oversize`` when no fallback
+    program exists, ``rejected_invalid`` when ``validate_graph`` says the
+    graph is malformed) — never a silent drop. Returns
+    (packable, oversize, outcomes); ``outcomes[i]`` carries the queue
+    index, the status (continuous-scheduler status names), and a reason
+    for rejections."""
+    from repro.data import pipeline as P
+    from repro.runtime import scheduler as S
+    packable, oversize, outcomes = [], [], []
+    for i, g in enumerate(queue):
+        if validate:
+            reason = P.validate_graph(g)
+            if reason is not None:
+                outcomes.append({"index": i, "status": S.REJECTED_INVALID,
+                                 "reason": reason})
+                continue
+        if P.graph_fits_budget(g, node_budget, edge_budget):
+            packable.append(g)
+            outcomes.append({"index": i, "status": S.SERVED_PACKED})
+        elif can_fallback:
+            oversize.append(g)
+            outcomes.append({"index": i, "status": S.SERVED_FALLBACK})
+        else:
+            outcomes.append({
+                "index": i, "status": S.REJECTED_OVERSIZE,
+                "reason": f"{g.num_nodes} nodes/{g.num_edges} edges exceed "
+                          f"the packed budgets ({node_budget} nodes/"
+                          f"{edge_budget} edges) and no fallback program "
+                          "is available"})
+    return packable, oversize, outcomes
+
+
+def _rejection_stats(stats: dict, outcomes) -> dict:
+    """Fold per-request admission outcomes into a wave drain's stats.
+    ``dropped`` stays as a legacy alias of ``rejected_oversize``."""
+    from repro.runtime import scheduler as S
+    stats["outcomes"] = outcomes
+    stats["rejected_oversize"] = sum(
+        1 for o in outcomes if o["status"] == S.REJECTED_OVERSIZE)
+    stats["rejected_invalid"] = sum(
+        1 for o in outcomes if o["status"] == S.REJECTED_INVALID)
+    stats["dropped"] = stats["rejected_oversize"]
+    return stats
+
+
 def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
                    graphs_in, slots_in, slot_capacity: int):
     """Shared pack-and-launch body of the wave drains (and of anything
@@ -96,7 +150,6 @@ def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
         "served": served + n_fallback,
         "packed_served": served,
         "fallback_served": n_fallback,
-        "dropped": len(oversize) - n_fallback,
         "n_batches": len(batches),
         "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
         "node_slot_utilization": slots_used / max(slot_capacity, 1),
@@ -106,7 +159,8 @@ def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
 
 
 def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
-                    batch_graphs: int, fallback_fn=None):
+                    batch_graphs: int, fallback_fn=None, *,
+                    validate: bool = True):
     """Synchronous wave drain of ``queue`` (a list of data.pipeline.Graph
     requests) through the packed program ``fn``; every call sees the same
     static shapes, so XLA compiles exactly once. Returns
@@ -118,29 +172,38 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
     a GraphBatch; with ``fallback_fn`` (the padded per-graph oracle
     ``G.apply``, jitted) each one is answered individually through it,
     so every request gets a response and ``stats["fallback_served"]``
-    counts them. Only when no fallback program is supplied are oversize
-    requests dropped (``stats["dropped"]``).
+    counts them. Without a fallback program each oversize request gets
+    an explicit per-request ``rejected_oversize`` outcome, and malformed
+    graphs get ``rejected_invalid`` (``validate=False`` skips the
+    screen) — ``stats["outcomes"]`` lists every request's status under
+    the same names the continuous scheduler uses, and
+    ``stats["dropped"]`` stays as a legacy alias of
+    ``rejected_oversize``.
 
     This drain is the offline-throughput baseline (and parity oracle)
     for the continuous-batching scheduler — see
     ``drain_gnn_queue_continuous`` for the latency-aware path."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
-    batches, oversize = P.pack_dataset(queue, node_budget, edge_budget,
+    packable, oversize, outcomes = _admit(
+        queue, node_budget, edge_budget,
+        can_fallback=fallback_fn is not None, validate=validate)
+    batches, leftover = P.pack_dataset(packable, node_budget, edge_budget,
                                        batch_graphs)
+    assert not leftover, "_admit already screened for budget fit"
     outs, fallback_outs, stats = _launch_packed(
         lambda b: fn(params, G.packed_to_device(b)), batches, oversize,
         None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
         graphs_in=lambda b: int(b["num_graphs"]),
         slots_in=lambda b: int((b["node_graph_id"] < batch_graphs).sum()),
         slot_capacity=len(batches) * node_budget)
-    return outs + fallback_outs, stats
+    return outs + fallback_outs, _rejection_stats(stats, outcomes)
 
 
 def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
                             edge_budget: int, batch_graphs: int,
                             num_shards: int, fallback_fn=None,
-                            task: str = "graph"):
+                            task: str = "graph", *, validate: bool = True):
     """Sharded wave drain: requests are partitioned into per-device shard
     waves (data.pipeline.pack_dataset(num_shards=)) and each wave runs
     as one SPMD program over the ("data",) mesh — ``fn`` from
@@ -149,11 +212,17 @@ def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
     tasks (``task="node"``) get the raw stacked per-shard node tables
     per wave — their row order is shard-local, so there is no global
     host order to restore. The oversize padded fallback behaves exactly
-    as in ``drain_gnn_queue`` (same ``_launch_packed`` body)."""
+    as in ``drain_gnn_queue`` (same ``_launch_packed`` body), and so do
+    the explicit per-request rejection outcomes (same ``_admit``
+    screen)."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
-    waves, oversize = P.pack_dataset(queue, node_budget, edge_budget,
+    packable, oversize, outcomes = _admit(
+        queue, node_budget, edge_budget,
+        can_fallback=fallback_fn is not None, validate=validate)
+    waves, leftover = P.pack_dataset(packable, node_budget, edge_budget,
                                      batch_graphs, num_shards=num_shards)
+    assert not leftover, "_admit already screened for budget fit"
     dev_outs, fallback_outs, stats = _launch_packed(
         lambda w: fn(params, G.stack_shards(w)), waves, oversize,
         None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
@@ -168,7 +237,7 @@ def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
                 for w, o in zip(waves, dev_outs)]
     else:
         outs = dev_outs
-    return outs + fallback_outs, stats
+    return outs + fallback_outs, _rejection_stats(stats, outcomes)
 
 
 def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
@@ -177,6 +246,9 @@ def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
                                load_graphs_per_s: float = 512.0,
                                deadline_s: float = 0.05,
                                max_queue_depth: int = 1024,
+                               launch_timeout_s: float = float("inf"),
+                               max_retries: int = 2,
+                               validate: bool = True,
                                seed: int = 0):
     """Continuous-batching drain (``runtime.scheduler``): the queue is
     replayed as an open-loop Poisson arrival process at
@@ -187,9 +259,14 @@ def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
     outputs are the real program's outputs (parity with the wave
     drain). Batches launch on deadline expiry or budget-full; oversize
     requests ride ``fallback_fn``; admissions beyond ``max_queue_depth``
-    are rejected explicitly. Returns (responses, stats) — ``responses``
-    are ``runtime.scheduler.Response`` records carrying per-request
-    outputs and latencies. Lifecycle: docs/SERVING.md."""
+    (or malformed graphs, when ``validate``) are rejected explicitly.
+    The fault-tolerance knobs ride through: a launch not complete
+    within ``launch_timeout_s`` of virtual time fails as a hang and its
+    requests re-pack onto healthy lanes, up to ``max_retries`` times
+    each before the dead-letter ``failed`` status (docs/SERVING.md
+    §Fault tolerance). Returns (responses, stats) — ``responses`` are
+    ``runtime.scheduler.Response`` records carrying per-request outputs
+    and latencies. Lifecycle: docs/SERVING.md."""
     from repro.core import gnn_model as G
     from repro.runtime import scheduler as S
     rng = np.random.default_rng(np.random.SeedSequence([seed, 0xA221]))
@@ -206,7 +283,9 @@ def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
     sched = S.ContinuousScheduler(
         S.SchedulerConfig(node_budget, edge_budget, batch_graphs,
                           max_queue_depth=max_queue_depth,
-                          default_tier=S.SLOTier("standard", deadline_s, 1)),
+                          default_tier=S.SLOTier("standard", deadline_s, 1),
+                          launch_timeout_s=launch_timeout_s,
+                          max_retries=max_retries, validate=validate),
         executor)
     S.run_trace(sched, trace)
     stats = sched.summary()
@@ -290,18 +369,27 @@ def gnn_main(args):
             fn, params, queue, node_budget, edge_budget,
             args.batch_graphs, fallback_fn,
             load_graphs_per_s=args.load, deadline_s=args.deadline_ms / 1e3,
-            max_queue_depth=args.queue_depth)
+            max_queue_depth=args.queue_depth,
+            launch_timeout_s=(args.launch_timeout_ms / 1e3
+                              if args.launch_timeout_ms > 0
+                              else float("inf")),
+            max_retries=args.max_retries)
         stats["precision"] = policy.name
+
+        def ms(v):          # None when served == 0 — print it honestly
+            return "n/a" if v is None else f"{v * 1e3:.1f} ms"
         print(f"conv={args.conv} precision={policy.name} continuous "
               f"scheduler served {stats['served']}/{len(queue)} graphs in "
               f"{stats['n_batches']} launches at "
               f"{args.load:.0f} offered graphs/s "
-              f"(p50 {stats['p50_latency_s'] * 1e3:.1f} ms, "
-              f"p99 {stats['p99_latency_s'] * 1e3:.1f} ms, batch fill "
+              f"(p50 {ms(stats['p50_latency_s'])}, "
+              f"p99 {ms(stats['p99_latency_s'])}, batch fill "
               f"{stats['mean_batch_fill'] * 100:.0f}%, sustained "
               f"{stats['graphs_per_s']:.0f} graphs/s, "
               f"{stats['fallback_served']} oversize via padded fallback, "
-              f"{stats['rejected_queue_full']} rejected by backpressure)")
+              f"{stats['rejected_queue_full']} rejected by backpressure, "
+              f"{stats['rejected_invalid']} invalid, "
+              f"{stats['failed']} failed after retries)")
         return stats
     _, stats = drain(queue)
     stats["precision"] = policy.name
@@ -331,7 +419,8 @@ def gnn_main(args):
           f"({stats['graphs_per_s']:.0f} graphs/s, node-slot utilization "
           f"{stats['node_slot_utilization'] * 100:.0f}%, "
           f"{stats['fallback_served']} oversize via padded fallback, "
-          f"dropped {stats['dropped']}){err_txt}")
+          f"{stats['rejected_oversize']} rejected oversize, "
+          f"{stats['rejected_invalid']} rejected invalid){err_txt}")
     return stats
 
 
@@ -379,6 +468,15 @@ def main():
     ap.add_argument("--queue-depth", type=int, default=1024,
                     help="pending-queue bound for --scheduler continuous; "
                          "admissions beyond it are rejected (backpressure)")
+    ap.add_argument("--launch-timeout-ms", type=float, default=0.0,
+                    help="per-launch virtual-time bound for --scheduler "
+                         "continuous: a launch not complete within it "
+                         "fails as a hang and its requests re-pack onto "
+                         "healthy lanes (0 = disabled)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="failed-launch re-pack attempts per request for "
+                         "--scheduler continuous before the explicit "
+                         "dead-letter 'failed' status")
     ap.add_argument("--shards", type=int, default=1,
                     help="data-parallel device shards for --gnn serving: "
                          "the queue drains into per-device packed shard "

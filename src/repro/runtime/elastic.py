@@ -27,6 +27,18 @@ def plan_mesh_shape(n_devices: int, model_pref: int = 16,
     return (data, model), ("data", "model")
 
 
+def pool_plan(n_lanes: int, shards_per_executor: int = 1) -> dict:
+    """Plan the serving executor pool for ``n_lanes`` healthy lanes, each
+    driving ``shards_per_executor`` devices. The scheduler calls this on
+    every lane-availability change (quarantine / probe-back), so pool
+    shrinkage rides the same (data, model) planning rule as elastic
+    training recovery — no second sizing policy."""
+    shape, axes = plan_mesh_shape(n_lanes * shards_per_executor,
+                                  model_pref=shards_per_executor)
+    return {"n_lanes": int(n_lanes), "mesh_shape": tuple(shape),
+            "axes": tuple(axes)}
+
+
 def replan(devices, model_pref: int = 16) -> Mesh:
     shape, axes = plan_mesh_shape(len(devices), model_pref)
     n = int(np.prod(shape))

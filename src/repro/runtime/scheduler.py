@@ -31,15 +31,28 @@ Design rules:
   bound is rejected immediately (``rejected_queue_full``) instead of
   buffered without bound. Oversize requests ride the padded fallback
   path when the executor provides one, else they are rejected
-  (``rejected_oversize``) — never silently dropped.
-* **Straggler re-packing.** Per-executor health rides
-  ``runtime.straggler.StragglerDetector``: every completion records the
-  lane's service time, and a lane flagged ``evict`` is retired (no
-  further launches) so its would-have-been work re-packs onto the
-  healthy lanes. Executor-pool shape comes from
+  (``rejected_oversize``); malformed inputs are rejected at admission
+  (``rejected_invalid``, via ``data.pipeline.validate_graph`` when
+  ``SchedulerConfig.validate`` is set) — never silently dropped.
+* **Fault tolerance.** An executor exception, hung launch, or
+  NaN/Inf-corrupted output must never crash the serving loop or lose a
+  request. A failed launch's requests re-pack **exactly once each**
+  onto healthy lanes with capped exponential backoff, and after
+  ``max_retries`` re-pack attempts a request resolves to the explicit
+  dead-letter status ``failed`` — every submitted request ends in
+  exactly one terminal status, under any fault plan
+  (``runtime.faults`` is the deterministic injection harness).
+* **Lane health.** Per-lane service times ride
+  ``runtime.straggler.StragglerDetector``, and hard launch failures
+  drive the lane state machine healthy -> degraded -> quarantined ->
+  (single canary probe) -> healthy. Quarantine is *temporary*: after a
+  capped-exponential cooldown the lane takes exactly one probe launch
+  and rejoins the pool on success. Pool shrinkage/regrowth is
+  re-planned through ``runtime.elastic.pool_plan`` on every
+  transition (``pool_events``). Executor-pool sizing comes from
   ``runtime.elastic.plan_mesh_shape`` (``plan_executor_pool``).
 
-Lifecycle diagram and knob table: docs/SERVING.md.
+Lifecycle diagram, failure taxonomy, and knob table: docs/SERVING.md.
 """
 from __future__ import annotations
 
@@ -50,7 +63,7 @@ import time
 import numpy as np
 
 from repro.data import pipeline as P
-from repro.runtime.elastic import plan_mesh_shape
+from repro.runtime.elastic import plan_mesh_shape, pool_plan
 from repro.runtime.straggler import StragglerDetector
 
 # response statuses — every submitted request ends in exactly one of these
@@ -58,6 +71,33 @@ SERVED_PACKED = "served_packed"
 SERVED_FALLBACK = "served_fallback"
 REJECTED_QUEUE = "rejected_queue_full"
 REJECTED_OVERSIZE = "rejected_oversize"
+REJECTED_INVALID = "rejected_invalid"
+FAILED = "failed"
+
+# lane health states: healthy -> degraded -> quarantined -> probing -> healthy
+LANE_HEALTHY = "healthy"
+LANE_DEGRADED = "degraded"
+LANE_QUARANTINED = "quarantined"
+LANE_PROBING = "probing"
+
+# launch failure taxonomy (docs/SERVING.md): the `status` a failed
+# launch records and the `reason` its lane-health events carry
+FAIL_CRASH = "crash"
+FAIL_TIMEOUT = "timeout"
+FAIL_NONFINITE = "nonfinite_output"
+
+
+class ExecutorCrash(RuntimeError):
+    """An executor failed mid-launch. ``after_s`` is how long after the
+    launch the failure surfaces on the virtual timeline (0.0 = at
+    launch). Executors (and the ``runtime.faults`` harness) raise this;
+    any *other* exception an executor raises is handled identically
+    with ``after_s = 0`` — a lane fault must never crash the serving
+    loop."""
+
+    def __init__(self, msg: str = "executor crashed", after_s: float = 0.0):
+        super().__init__(msg)
+        self.after_s = float(after_s)
 
 
 # ------------------------------------------------------------------ clock --
@@ -79,14 +119,18 @@ class VirtualClock:
 
 # ---------------------------------------------------------------- metrics --
 
-def percentile(values, q: float) -> float:
+def percentile(values, q: float) -> float | None:
     """Nearest-rank percentile: the smallest sample whose empirical CDF
     reaches q/100 (``sorted(values)[ceil(q/100 * n) - 1]``). Chosen over
     interpolating definitions because scripted traces then have
-    *closed-form* expected p50/p99 the tests can assert exactly."""
+    *closed-form* expected p50/p99 the tests can assert exactly.
+
+    Returns ``None`` (an explicit null that survives JSON round-trips,
+    unlike NaN) when ``values`` is empty — callers gate on
+    ``served == 0`` before comparing percentiles."""
     s = sorted(values)
     if not s:
-        return float("nan")
+        return None
     k = max(1, math.ceil(q / 100.0 * len(s)))
     return float(s[min(k, len(s)) - 1])
 
@@ -95,7 +139,8 @@ def summarize(responses, *, fills=(), max_graphs: int = 0,
               node_budget: int = 0, nodes_used: int = 0) -> dict:
     """Latency/throughput/fill statistics over a response list. Shared by
     the continuous scheduler and the wave-drain baseline so their
-    figures are directly comparable."""
+    figures are directly comparable. With ``served == 0`` every latency
+    figure is an explicit ``None`` (JSON null), never NaN."""
     served = [r for r in responses if r.served]
     lat = [r.latency_s for r in served]
     by_status: dict = {}
@@ -121,6 +166,8 @@ def summarize(responses, *, fills=(), max_graphs: int = 0,
         "fallback_served": by_status.get(SERVED_FALLBACK, 0),
         "rejected_queue_full": by_status.get(REJECTED_QUEUE, 0),
         "rejected_oversize": by_status.get(REJECTED_OVERSIZE, 0),
+        "rejected_invalid": by_status.get(REJECTED_INVALID, 0),
+        "failed": by_status.get(FAILED, 0),
         "n_launches": n_packed,
         "mean_batch_fill": (sum(fills) / (n_packed * max_graphs)
                             if n_packed and max_graphs else 0.0),
@@ -128,8 +175,8 @@ def summarize(responses, *, fills=(), max_graphs: int = 0,
                                   if n_packed and node_budget else 0.0),
         "p50_latency_s": percentile(lat, 50),
         "p99_latency_s": percentile(lat, 99),
-        "mean_latency_s": (sum(lat) / len(lat)) if lat else float("nan"),
-        "max_latency_s": max(lat) if lat else float("nan"),
+        "mean_latency_s": (sum(lat) / len(lat)) if lat else None,
+        "max_latency_s": max(lat) if lat else None,
         "graphs_per_s": len(served) / max(t1 - t0, 1e-12) if served else 0.0,
         "makespan_s": t1 - t0,
         "per_tenant": per_tenant,
@@ -164,6 +211,12 @@ class Request:
     graph: P.Graph
     tenant: str = "default"
     arrival_s: float = 0.0
+    #: failed-launch re-pack attempts consumed so far (exactly-once:
+    #: a request rides at most ``1 + max_retries`` launches)
+    attempts: int = 0
+    #: earliest time a retried request may be packed again (capped
+    #: exponential backoff from the failure time)
+    not_before_s: float = 0.0
 
 
 @dataclasses.dataclass(eq=False)
@@ -242,7 +295,9 @@ class MeasuredExecutor:
     until their result is ready; the measured wall-seconds become the
     service time on the scheduler's virtual timeline. Arrivals stay
     scripted, so the latency statistics are traffic-shaped while the
-    compute cost is the real program's."""
+    compute cost is the real program's. A raised exception is handled
+    by the scheduler as a launch crash (retry -> dead-letter), never a
+    serving-loop crash."""
 
     def __init__(self, batch_fn, fallback_fn=None):
         self.batch_fn = batch_fn
@@ -281,11 +336,51 @@ class SchedulerConfig:
     edge_budget: int
     max_graphs: int
     #: per-tenant pending-queue bound: admissions beyond it are rejected
-    #: (backpressure), never buffered without bound
+    #: (backpressure), never buffered without bound. Failed-launch
+    #: retries bypass the bound — they were already admitted once.
     max_queue_depth: int = 256
     #: tenant name -> SLOTier; unknown tenants get ``default_tier``
     tiers: dict | None = None
     default_tier: SLOTier = DEFAULT_TIER
+    #: virtual-time bound on one launch; a launch not complete by
+    #: ``launch_s + launch_timeout_s`` fails as a hang (the lane is a
+    #: hard-failure suspect) and its requests re-pack. inf = no bound.
+    launch_timeout_s: float = math.inf
+    #: failed-launch re-pack attempts per request before the explicit
+    #: dead-letter ``failed`` status (never a hang, never a silent drop)
+    max_retries: int = 2
+    #: capped exponential backoff before a failed request re-packs:
+    #: min(retry_backoff_s * 2^(attempt-1), retry_backoff_cap_s)
+    retry_backoff_s: float = 0.0
+    retry_backoff_cap_s: float = 0.5
+    #: consecutive hard launch failures before a lane quarantines (the
+    #: first failure only degrades it)
+    quarantine_after: int = 2
+    #: cooldown before a quarantined lane takes its single canary probe
+    #: launch; doubles per quarantine up to the cap
+    quarantine_cooldown_s: float = 0.5
+    quarantine_cooldown_cap_s: float = 8.0
+    #: screen admissions through ``data.pipeline.validate_graph`` and
+    #: reject malformed graphs explicitly (``rejected_invalid``)
+    validate: bool = False
+    #: devices each lane drives (feeds ``elastic.pool_plan`` replans)
+    shards_per_executor: int = 1
+
+
+@dataclasses.dataclass(eq=False)
+class LaneHealth:
+    """Per-lane health state machine (docs/SERVING.md §Fault tolerance).
+
+    healthy -> degraded (first hard failure) -> quarantined
+    (``quarantine_after`` consecutive failures, or a straggler ``evict``)
+    -> probing (single canary launch once ``probe_at_s`` passes) ->
+    healthy on probe success / re-quarantined with doubled cooldown on
+    probe failure."""
+    state: str = LANE_HEALTHY
+    consecutive_failures: int = 0
+    failures: int = 0            # lifetime hard-failure count
+    quarantines: int = 0         # lifetime quarantine count (cooldown 2^k)
+    probe_at_s: float = 0.0      # probe eligibility time while quarantined
 
 
 @dataclasses.dataclass(eq=False)
@@ -296,6 +391,8 @@ class _Inflight:
     launch_s: float
     done_s: float
     seq: int
+    error: str | None = None  # FAIL_CRASH when the launch already failed
+    probe: bool = False       # canary launch of a quarantined lane
 
 
 @dataclasses.dataclass(eq=False)
@@ -323,23 +420,39 @@ class ContinuousScheduler:
         self.pending: list = []
         self.inflight: dict = {}         # exec id -> _Inflight
         self.responses: list = []
-        self.launches: list = []         # per-launch {seq, kind, req_ids}
-        self.retired: set = set()
+        self.launches: list = []         # per-launch {seq, kind, req_ids, …}
+        self.lanes = [LaneHealth() for _ in self.executors]
+        self.events: list = []           # health/failure event log
+        self.pool_events: list = []      # elastic pool replans
+        self.retries = 0                 # failed-request re-packs performed
+        self.failed_launches = 0
+        self.probes_succeeded = 0
+        self.probes_failed = 0
         self._depth: dict = {}           # tenant -> pending count
         self._next_id = 0
         self._seq = 0
         self._fills: list = []
         self._nodes_used = 0
         self._flushing = False
+        self._replan_pool(self.clock.now())
 
     # ------------------------------------------------------------- admission
     def submit(self, graph: P.Graph, tenant: str = "default") -> int:
         """Admit (or reject) one request at the clock's current time.
         Always returns the request id; exactly one Response will
-        eventually carry it."""
+        eventually carry it. Check order: malformed input (when
+        ``cfg.validate``), oversize with no fallback lane, queue bound."""
         now = self.clock.now()
         rid = self._next_id
         self._next_id += 1
+        if self.cfg.validate:
+            reason = P.validate_graph(graph)
+            if reason is not None:
+                self.responses.append(Response(rid, tenant, REJECTED_INVALID,
+                                               now))
+                self.events.append({"t": now, "kind": "rejected_invalid",
+                                    "req_id": rid, "reason": reason})
+                return rid
         fits = P.graph_fits_budget(graph, self.cfg.node_budget,
                                    self.cfg.edge_budget)
         if not fits and not self._can_fallback():
@@ -357,29 +470,43 @@ class ContinuousScheduler:
     # ----------------------------------------------------------- event loop
     def next_event_s(self) -> float | None:
         """Earliest time ``tick()`` would do work: the soonest in-flight
-        completion, or — when a lane is idle — the earliest pending
-        launch (now if budget-full or flushing, else the oldest
-        deadline). None when fully drained."""
-        times = [u.done_s for u in self.inflight.values()]
-        unit = self._ready_unit()
-        if unit is not None:
-            sel, _ = unit
-            if self._flushing or sel.full:
-                times.append(self.clock.now())
+        completion *or timeout expiry*, the earliest pending launch (now
+        if budget-full or flushing, else the oldest deadline), a retry
+        maturing from backoff, or an idle quarantined lane becoming
+        probe-eligible. None when fully drained."""
+        now = self.clock.now()
+        times = [self._due_s(u) for u in self.inflight.values()]
+        if self.pending:
+            times += [r.not_before_s for r in self.pending
+                      if r.not_before_s > now]
+            unit = self._ready_unit(now)
+            if unit is not None:
+                sel, _ = unit
+                if self._flushing or sel.full:
+                    times.append(now)
+                else:
+                    times.append(max(self._earliest_due_s(now), now))
             else:
-                times.append(max(self._earliest_due_s(), self.clock.now()))
+                # nothing launchable right now: wake when an idle
+                # quarantined lane becomes probe-eligible
+                times += [l.probe_at_s for i, l in enumerate(self.lanes)
+                          if i not in self.inflight
+                          and l.state == LANE_QUARANTINED
+                          and l.probe_at_s > now]
         return min(times) if times else None
 
     def tick(self):
         """Process everything due at the clock's current time:
-        completions first (they free lanes), then launches."""
+        completions/timeouts first (they free lanes), then launches."""
         now = self.clock.now()
         self._complete_due(now)
         self._launch_ready(now)
 
     def drain(self):
         """Flush: launch everything pending regardless of deadlines and
-        run the clock forward until all lanes are idle."""
+        run the clock forward until all lanes are idle. Terminates under
+        any fault plan — retries are capped per request and quarantine
+        cooldowns are finite."""
         self._flushing = True
         try:
             while True:
@@ -396,69 +523,99 @@ class ContinuousScheduler:
                       max_graphs=self.cfg.max_graphs,
                       node_budget=self.cfg.node_budget,
                       nodes_used=self._nodes_used)
-        s["retired_executors"] = sorted(self.retired)
+        s["retries"] = self.retries
+        s["failed_launches"] = self.failed_launches
+        s["lane_states"] = [l.state for l in self.lanes]
+        s["quarantined_executors"] = sorted(
+            i for i, l in enumerate(self.lanes)
+            if l.state == LANE_QUARANTINED)
+        s["probes"] = {"succeeded": self.probes_succeeded,
+                       "failed": self.probes_failed}
+        s["pool_events"] = list(self.pool_events)
         return s
 
     # -------------------------------------------------------------- internal
     def _tier(self, tenant: str) -> SLOTier:
         return (self.cfg.tiers or {}).get(tenant, self.cfg.default_tier)
 
-    def _active(self):
-        return [i for i in range(len(self.executors))
-                if i not in self.retired]
+    def _due_s(self, u: _Inflight) -> float:
+        """Time an in-flight unit resolves: completion or timeout expiry,
+        whichever is sooner."""
+        return min(u.done_s, u.launch_s + self.cfg.launch_timeout_s)
 
-    def _launch_lane(self, sel) -> int | None:
-        """Lowest idle active lane able to run the unit (fallback units
-        need a fallback-capable executor)."""
-        for i in self._active():
+    def _available(self):
+        """Lanes currently in the pool (not quarantined)."""
+        return [i for i, l in enumerate(self.lanes)
+                if l.state != LANE_QUARANTINED]
+
+    def _launch_lane(self, sel, now: float) -> int | None:
+        """Best idle lane able to run the unit right now: healthy or
+        degraded lanes first (lowest index), then probe-eligible
+        quarantined lanes (their launch is the canary probe). Fallback
+        units need a fallback-capable executor."""
+        cands = []
+        for i, lane in enumerate(self.lanes):
             if i in self.inflight:
                 continue
             if sel.fallback is not None and not getattr(
                     self.executors[i], "can_fallback", False):
                 continue
-            return i
-        return None
+            if lane.state in (LANE_HEALTHY, LANE_DEGRADED):
+                cands.append((0, i))
+            elif lane.state == LANE_QUARANTINED \
+                    and now >= lane.probe_at_s - 1e-12:
+                cands.append((1, i))
+        return min(cands)[1] if cands else None
 
-    def _ready_unit(self):
+    def _ready_unit(self, now: float):
         """(selection, lane) for the next launchable unit, or None. When
         the head-of-order oversize request has no idle fallback-capable
         lane, packed work behind it may still launch."""
-        if not self.pending:
+        if not self._ready_pending(now):
             return None
-        sel = self._select()
-        lane = self._launch_lane(sel)
+        sel = self._select(now)
+        lane = self._launch_lane(sel, now)
         if lane is None and sel.fallback is not None:
-            sel = self._select(skip_head_oversize=True)
-            lane = self._launch_lane(sel) if sel.requests else None
+            sel = self._select(now, skip_head_oversize=True)
+            lane = self._launch_lane(sel, now) if sel.requests else None
         if lane is None or (sel.fallback is None and not sel.requests):
             return None
         return sel, lane
 
     def _can_fallback(self) -> bool:
-        return any(getattr(self.executors[i], "can_fallback", False)
-                   for i in self._active())
+        # quarantine is temporary, so a quarantined fallback lane still
+        # counts at admission — its work waits for the probe-back
+        return any(getattr(e, "can_fallback", False)
+                   for e in self.executors)
 
     def _oversize(self, g: P.Graph) -> bool:
         return not P.graph_fits_budget(g, self.cfg.node_budget,
                                        self.cfg.edge_budget)
 
-    def _ordered_pending(self) -> list:
-        return sorted(self.pending,
+    def _ready_pending(self, now: float) -> list:
+        """Pending requests eligible to pack now (retry backoff
+        honored)."""
+        return [r for r in self.pending if r.not_before_s <= now + 1e-12]
+
+    def _ordered_pending(self, now: float) -> list:
+        return sorted(self._ready_pending(now),
                       key=lambda r: (-self._tier(r.tenant).priority,
                                      r.arrival_s, r.req_id))
 
-    def _earliest_due_s(self) -> float:
-        return min(r.arrival_s + self._tier(r.tenant).deadline_s
-                   for r in self.pending)
+    def _earliest_due_s(self, now: float) -> float:
+        return min(max(r.arrival_s + self._tier(r.tenant).deadline_s,
+                       r.not_before_s)
+                   for r in self._ready_pending(now))
 
-    def _select(self, skip_head_oversize: bool = False) -> _Selection:
+    def _select(self, now: float,
+                skip_head_oversize: bool = False) -> _Selection:
         """First-fit scan of the pending queue in (priority, arrival)
         order. An oversize request at the head of the order becomes a
         dedicated fallback launch; oversize requests further back wait
         (they cannot share a batch). A fitting-class request blocked by
         the remaining budget marks the batch *full* — it re-packs into
         the next launch (the straggler rule)."""
-        order = self._ordered_pending()
+        order = self._ordered_pending(now)
         if (not skip_head_oversize and order
                 and self._oversize(order[0].graph)):
             return _Selection([], order[0], True)
@@ -482,12 +639,12 @@ class ContinuousScheduler:
 
     def _launch_ready(self, now: float):
         while True:
-            unit = self._ready_unit()
+            unit = self._ready_unit(now)
             if unit is None:
                 return
             sel, lane = unit
             due = (self._flushing or sel.full
-                   or self._earliest_due_s() <= now)
+                   or self._earliest_due_s(now) <= now)
             if not due:
                 return
             self._launch(lane, sel, now)
@@ -496,16 +653,32 @@ class ContinuousScheduler:
         self.pending.remove(req)
         self._depth[req.tenant] -= 1
 
+    def _requeue(self, req: Request):
+        """Exactly-once re-pack of a failed launch's rider: back into
+        pending (bypassing the admission bound — it was admitted once)
+        with its backoff-derived earliest re-pack time already set."""
+        self.pending.append(req)
+        self._depth[req.tenant] = self._depth.get(req.tenant, 0) + 1
+
     def _launch(self, exec_id: int, sel: _Selection, now: float):
         executor = self.executors[exec_id]
+        lane = self.lanes[exec_id]
+        probe = lane.state == LANE_QUARANTINED
+        if probe:
+            lane.state = LANE_PROBING
+            self.events.append({"t": now, "kind": "probe_start",
+                                "executor": exec_id, "seq": self._seq})
+        error, after_s = None, 0.0
         if sel.fallback is not None:
-            req = sel.fallback
-            self._remove_pending(req)
-            out, svc = executor.run_fallback(req.graph)
-            unit = _Inflight("fallback", [req], out, now, now + svc,
-                             self._seq)
+            kind, reqs = "fallback", [sel.fallback]
+            self._remove_pending(sel.fallback)
+            try:
+                out, svc = executor.run_fallback(sel.fallback.graph)
+            except Exception as e:     # noqa: BLE001 — lane fault, not ours
+                out, svc = None, 0.0
+                error, after_s = FAIL_CRASH, getattr(e, "after_s", 0.0)
         else:
-            reqs = sel.requests
+            kind, reqs = "packed", sel.requests
             for r in reqs:
                 self._remove_pending(r)
             batch, k = P.pack_graphs([r.graph for r in reqs],
@@ -513,24 +686,48 @@ class ContinuousScheduler:
                                      self.cfg.edge_budget,
                                      self.cfg.max_graphs)
             assert k == len(reqs), "selection must fit the budgets"
-            out, svc = executor.run_batch(batch)
-            unit = _Inflight("packed", reqs, out, now, now + svc, self._seq)
-            self._fills.append(len(reqs))
-            self._nodes_used += sum(r.graph.num_nodes for r in reqs)
-        self.launches.append({"seq": self._seq, "kind": unit.kind,
-                              "executor": exec_id,
-                              "req_ids": [r.req_id for r in unit.requests]})
+            try:
+                out, svc = executor.run_batch(batch)
+            except Exception as e:     # noqa: BLE001 — lane fault, not ours
+                out, svc = None, 0.0
+                error, after_s = FAIL_CRASH, getattr(e, "after_s", 0.0)
+            if error is None:
+                self._fills.append(len(reqs))
+                self._nodes_used += sum(r.graph.num_nodes for r in reqs)
+        done = now + (after_s if error else svc)
+        if not math.isfinite(done) \
+                and not math.isfinite(self.cfg.launch_timeout_s):
+            raise RuntimeError(
+                f"launch {self._seq} on lane {exec_id} would hang forever: "
+                f"service time is {svc} and no launch_timeout_s is "
+                "configured — set SchedulerConfig.launch_timeout_s")
+        unit = _Inflight(kind, reqs, out, now, done, self._seq,
+                         error=error, probe=probe)
+        self.launches.append({"seq": self._seq, "kind": kind,
+                              "executor": exec_id, "probe": probe,
+                              "status": None,
+                              "req_ids": [r.req_id for r in reqs]})
         self.inflight[exec_id] = unit
         self._seq += 1
 
     def _complete_due(self, now: float):
         while True:
-            due = [(u.done_s, ex) for ex, u in self.inflight.items()
-                   if u.done_s <= now]
+            due = [(self._due_s(u), ex) for ex, u in self.inflight.items()
+                   if self._due_s(u) <= now]
             if not due:
                 return
-            _, ex = min(due)
+            t, ex = min(due)
             u = self.inflight.pop(ex)
+            error = u.error
+            if error is None and u.done_s > \
+                    u.launch_s + self.cfg.launch_timeout_s:
+                error = FAIL_TIMEOUT
+            if error is None and self._nonfinite_outputs(u):
+                error = FAIL_NONFINITE
+            if error is not None:
+                self._fail_launch(ex, u, error, t)
+                continue
+            self.launches[u.seq]["status"] = "ok"
             status = SERVED_PACKED if u.kind == "packed" else SERVED_FALLBACK
             for k, r in enumerate(u.requests):
                 out = None
@@ -540,20 +737,121 @@ class ContinuousScheduler:
                 self.responses.append(Response(
                     r.req_id, r.tenant, status, r.arrival_s, u.launch_s,
                     u.done_s, out, u.seq, ex))
-            self.detector.record(f"exec{ex}", u.done_s - u.launch_s)
-            self._apply_health_actions()
+            self._lane_success(ex, u)
+            if self.lanes[ex].state != LANE_QUARANTINED:
+                # a quarantined lane's straggling completion must not
+                # repopulate the detector state forget() just cleared
+                self.detector.record(f"exec{ex}", u.done_s - u.launch_s)
+            self._apply_health_actions(u.done_s)
 
-    def _apply_health_actions(self):
+    # --------------------------------------------------- failure handling --
+    def _nonfinite_outputs(self, u: _Inflight) -> bool:
+        """Output guard: a launch whose result rows contain NaN/Inf is a
+        failed launch (corrupted lane), not an answer to serve."""
+        if u.outputs is None:
+            return False
+        try:
+            arr = np.asarray(u.outputs)
+        except Exception:              # noqa: BLE001 — unscreenable object
+            return False
+        if not np.issubdtype(arr.dtype, np.floating):
+            return False
+        rows = arr[:len(u.requests)] if u.kind == "packed" else arr
+        return not bool(np.isfinite(rows).all())
+
+    def _fail_launch(self, ex: int, u: _Inflight, error: str, fail_s: float):
+        """A launch failed (crash / timeout / non-finite outputs): mark
+        it, punish the lane, and re-pack every rider exactly once — or
+        dead-letter it as ``failed`` after ``max_retries``."""
+        self.launches[u.seq]["status"] = error
+        self.failed_launches += 1
+        self.events.append({"t": fail_s, "kind": "launch_failed",
+                            "executor": ex, "seq": u.seq, "error": error,
+                            "req_ids": [r.req_id for r in u.requests]})
+        self._note_failure(ex, fail_s, error)
+        for r in u.requests:
+            r.attempts += 1
+            if r.attempts > self.cfg.max_retries:
+                self.responses.append(Response(
+                    r.req_id, r.tenant, FAILED, r.arrival_s, u.launch_s,
+                    fail_s, None, u.seq, ex))
+            else:
+                backoff = min(
+                    self.cfg.retry_backoff_s * (2 ** (r.attempts - 1)),
+                    self.cfg.retry_backoff_cap_s)
+                r.not_before_s = fail_s + backoff
+                self._requeue(r)
+                self.retries += 1
+
+    def _note_failure(self, ex: int, t: float, error: str):
+        lane = self.lanes[ex]
+        lane.failures += 1
+        lane.consecutive_failures += 1
+        if lane.state == LANE_PROBING:
+            self.probes_failed += 1
+            self._quarantine(ex, t, f"probe_failed:{error}")
+        elif lane.state == LANE_QUARANTINED:
+            # evicted-while-busy lane whose straggling launch then
+            # failed: extend the quarantine
+            self._quarantine(ex, t, error)
+        elif lane.consecutive_failures >= self.cfg.quarantine_after:
+            self._quarantine(ex, t, error)
+        else:
+            lane.state = LANE_DEGRADED
+
+    def _lane_success(self, ex: int, u: _Inflight):
+        lane = self.lanes[ex]
+        lane.consecutive_failures = 0
+        if lane.state == LANE_PROBING:
+            self.probes_succeeded += 1
+            lane.state = LANE_HEALTHY
+            self.events.append({"t": u.done_s, "kind": "probe_success",
+                                "executor": ex, "seq": u.seq})
+            self._replan_pool(u.done_s)
+        elif lane.state == LANE_DEGRADED:
+            lane.state = LANE_HEALTHY
+
+    def _quarantine(self, ex: int, t: float, reason: str):
+        """Take a lane out of the pool for a capped-exponential cooldown;
+        it returns through a single canary probe launch. Clears its
+        straggler-detector state so stale EMAs cannot re-flag it."""
+        lane = self.lanes[ex]
+        cooldown = min(
+            self.cfg.quarantine_cooldown_s * (2 ** lane.quarantines),
+            self.cfg.quarantine_cooldown_cap_s)
+        lane.state = LANE_QUARANTINED
+        lane.probe_at_s = t + cooldown
+        lane.quarantines += 1
+        self.detector.forget(f"exec{ex}")
+        self.events.append({"t": t, "kind": "quarantine", "executor": ex,
+                            "reason": reason,
+                            "probe_at_s": lane.probe_at_s})
+        self._replan_pool(t)
+
+    def _apply_health_actions(self, t: float):
         """Straggler policy: a lane flagged ``evict`` by the detector is
-        retired — no new launches land on it, so its future work
-        re-packs onto the healthy lanes. The last active lane is never
-        retired."""
+        quarantined — no new launches land on it until its probe, so its
+        would-have-been work re-packs onto the healthy lanes. The last
+        available lane is never quarantined for mere slowness (hard
+        failures may still quarantine it; the probe-back bounds the
+        outage)."""
         for host, action in self.detector.check().items():
             if action != "evict" or not host.startswith("exec"):
                 continue
             i = int(host[len("exec"):])
-            if i not in self.retired and len(self._active()) > 1:
-                self.retired.add(i)
+            if self.lanes[i].state == LANE_QUARANTINED:
+                continue
+            if len(self._available()) > 1:
+                self._quarantine(i, t, "straggler")
+
+    def _replan_pool(self, t: float):
+        """Re-plan the executor pool through ``runtime.elastic`` whenever
+        lane availability changes (quarantine / probe-back), so pool
+        shrinkage rides the same planning rule as elastic recovery."""
+        n = len(self._available())
+        plan = pool_plan(n, self.cfg.shards_per_executor) if n else \
+            {"n_lanes": 0, "mesh_shape": (), "axes": ()}
+        self.pool_events.append({"t": float(t), **plan})
 
 
 # ------------------------------------------------------------- simulation --
@@ -579,10 +877,27 @@ def poisson_trace(n: int, load_graphs_per_s: float,
 
 
 def run_trace(sched: ContinuousScheduler, trace) -> list:
-    """Drive an arrival trace (iterable of (time, graph, tenant), sorted
-    by time) through the scheduler to completion; returns the response
-    list. Purely event-driven: the clock jumps between arrivals,
-    deadline expiries, and completions — never sleeps."""
+    """Drive an arrival trace (iterable of (time, graph, tenant)) through
+    the scheduler to completion; returns the response list. The trace is
+    sorted into arrival order first, so unsorted traces replay the same
+    schedule as their sorted equivalent; an arrival before the
+    scheduler's current clock (or a non-finite arrival time) raises an
+    actionable error naming the offending entry instead of the opaque
+    "clock cannot run backwards" crash. Purely event-driven: the clock
+    jumps between arrivals, deadline expiries, and completions — never
+    sleeps."""
+    trace = list(trace)
+    t0 = sched.clock.now()
+    for i, (t, _g, _tn) in enumerate(trace):
+        if not math.isfinite(t):
+            raise ValueError(
+                f"trace entry #{i} has non-finite arrival time {t!r}")
+        if t < t0 - 1e-12:
+            raise ValueError(
+                f"trace entry #{i} arrives at t={t}s, before the "
+                f"scheduler clock (t={t0}s): run_trace sorts arrivals "
+                "into time order but cannot rewind the clock — start the "
+                "VirtualClock at or before the earliest arrival")
     ordered = sorted(enumerate(trace), key=lambda p: (p[1][0], p[0]))
     for _, (t, graph, tenant) in ordered:
         while True:

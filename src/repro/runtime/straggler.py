@@ -36,6 +36,14 @@ class StragglerDetector:
             st.ema = self.decay * st.ema + (1 - self.decay) * step_seconds
         st.n += 1
 
+    def forget(self, host: str):
+        """Drop a host's accumulated state. Call when a lane is retired
+        or quarantined: a lane out of the pool must stop contributing to
+        the fleet median and must not be re-flagged by ``check()`` on
+        stale EMAs — and when it probes back in, its record restarts
+        from the first fresh sample (tests/test_runtime.py pins this)."""
+        self.hosts.pop(host, None)
+
     def median_ema(self) -> float:
         vals = [s.ema for s in self.hosts.values() if s.n > 0]
         return statistics.median(vals) if vals else 0.0

@@ -46,3 +46,48 @@ def test_dataset_stats_helpers():
     assert P.compute_average_degree(ds) > 1.0
     n2, e2 = P.compute_median_nodes_and_edges(ds)
     assert isinstance(n2, int) and n2 > 0
+
+
+def test_validate_graph_accepts_wellformed():
+    cfg = P.GraphDataConfig(num_graphs=8)
+    for i in range(8):
+        assert P.validate_graph(P.make_graph(cfg, i)) is None
+
+
+def test_validate_graph_rejects_malformed():
+    """Each malformation names a reason; padding rows (-1 src beyond
+    num_edges, zeroed features) are the format's own and stay legal."""
+    import dataclasses
+    g = P.make_graph(P.GraphDataConfig(), 0)
+
+    def mutated(**kw):
+        return dataclasses.replace(g, **kw)
+
+    # negative endpoint inside the active prefix
+    ei = np.array(g.edge_index, copy=True)
+    ei[0, 0] = -1
+    assert "out of range" in P.validate_graph(mutated(edge_index=ei))
+    # endpoint >= num_nodes
+    ei = np.array(g.edge_index, copy=True)
+    ei[1, 1] = g.num_nodes
+    assert "out of range" in P.validate_graph(mutated(edge_index=ei))
+    # shape mismatches
+    assert "2-D" in P.validate_graph(mutated(node_feat=g.node_feat[:, 0]))
+    assert "(max_edges, 2)" in P.validate_graph(
+        mutated(edge_index=g.edge_index[:, :1]))
+    assert "rows" in P.validate_graph(mutated(edge_feat=g.edge_feat[:-1]))
+    # counts outside the buffer
+    assert "num_nodes" in P.validate_graph(
+        mutated(num_nodes=g.node_feat.shape[0] + 1))
+    assert "num_edges" in P.validate_graph(mutated(num_edges=-1))
+    # non-finite features in the active prefix only
+    nf = np.array(g.node_feat, copy=True)
+    nf[0, 0] = np.nan
+    assert "node features" in P.validate_graph(mutated(node_feat=nf))
+    ef = np.array(g.edge_feat, copy=True)
+    ef[0, 0] = np.inf
+    assert "edge features" in P.validate_graph(mutated(edge_feat=ef))
+    # the same poison *outside* the active prefix is padding: legal
+    nf2 = np.array(g.node_feat, copy=True)
+    nf2[g.num_nodes:, :] = np.nan
+    assert P.validate_graph(mutated(node_feat=nf2)) is None

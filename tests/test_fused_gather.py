@@ -330,7 +330,17 @@ def test_drain_gnn_queue_oversize_fallback():
           "num_nodes": jnp.int32(queue[-1].num_nodes)}
     want = np.asarray(fallback(params, el))
     np.testing.assert_allclose(np.asarray(outs[-1]), want, atol=1e-6)
-    # without a fallback_fn the oversize graph is dropped, as before
+    # with a fallback every request's outcome is a served status
+    assert [o["status"] for o in stats["outcomes"]] \
+        == ["served_packed"] * 6 + ["served_fallback"]
+    assert stats["rejected_oversize"] == 0
+    # without a fallback_fn the oversize request gets an explicit
+    # per-request rejected_oversize outcome (with a reason), not a
+    # silent drop; "dropped" stays as the legacy alias
     _, stats2 = drain_gnn_queue(fn, params, queue, node_budget,
                                 edge_budget, 8)
     assert stats2["dropped"] == 1 and stats2["fallback_served"] == 0
+    assert stats2["rejected_oversize"] == 1
+    (rej,) = [o for o in stats2["outcomes"]
+              if o["status"] == "rejected_oversize"]
+    assert rej["index"] == 6 and "exceed the packed budgets" in rej["reason"]

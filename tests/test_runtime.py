@@ -63,6 +63,41 @@ def test_straggler_empty_check():
     assert StragglerDetector().check() == {}
 
 
+def test_straggler_forget_clears_quarantined_host():
+    """Pinned behavior for lane quarantine/retirement (the serving
+    scheduler calls ``forget`` when it quarantines a lane): without it,
+    ``record`` keeps accumulating for the gone host and ``check()``
+    keeps re-flagging it on stale EMAs forever."""
+    det = StragglerDetector(threshold=1.5, evict_after=2)
+    for _ in range(4):
+        for h in ("h0", "h1", "h2"):
+            det.record(h, 1.0)
+        det.record("slow", 5.0)
+    det.check()
+    assert det.check()["slow"] == "evict"
+    det.forget("slow")
+    assert "slow" not in det.hosts
+    assert det.check() == {}, "a forgotten host must not be re-flagged"
+    # the host's median contribution is gone too
+    assert det.median_ema() == 1.0
+    # re-admission (probe-back) starts from a fresh first sample
+    det.record("slow", 1.0)
+    assert det.hosts["slow"].ema == 1.0
+    assert det.hosts["slow"].flagged_streak == 0
+    det.forget("never-seen")            # forgetting the unknown is a no-op
+
+
+def test_pool_plan_rides_mesh_planning():
+    from repro.runtime.elastic import pool_plan
+    assert pool_plan(4) == {"n_lanes": 4, "mesh_shape": (4, 1),
+                            "axes": ("data", "model")}
+    assert pool_plan(3, shards_per_executor=2) \
+        == {"n_lanes": 3, "mesh_shape": (3, 2),
+            "axes": ("data", "model")}
+    with pytest.raises(ValueError):
+        pool_plan(0)
+
+
 @pytest.mark.parametrize("n,model,want", [
     (512, 16, ((32, 16), ("data", "model"))),
     (496, 16, ((31, 16), ("data", "model"))),    # lost a host of 16

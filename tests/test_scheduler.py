@@ -61,14 +61,17 @@ def test_percentile_nearest_rank():
     assert S.percentile([7.0], 1) == 7.0
     assert S.percentile([7.0], 99) == 7.0
     assert S.percentile([3.0, 1.0, 2.0], 50) == 2.0
-    assert np.isnan(S.percentile([], 50))
+    assert S.percentile([], 50) is None     # explicit null, never NaN
 
 
 def test_summarize_empty():
     s = S.summarize([])
     assert s["served"] == 0
     assert s["graphs_per_s"] == 0.0
-    assert np.isnan(s["p50_latency_s"])
+    assert s["p50_latency_s"] is None       # JSON null, never NaN
+    assert s["p99_latency_s"] is None
+    assert s["mean_latency_s"] is None
+    assert s["max_latency_s"] is None
 
 
 def test_virtual_clock_monotonic():
@@ -191,29 +194,38 @@ def test_oversize_head_does_not_starve_packed_work():
 
 # -------------------------------------------------------------- stragglers --
 
-def test_straggler_eviction_retires_slow_lane():
+def test_straggler_eviction_quarantines_slow_lane():
     """A lane 10x slower than its peer is flagged by the detector and
-    retired; its would-have-been work re-packs onto the healthy lane."""
+    quarantined (temporarily out of the pool, probe-back pending); its
+    would-have-been work re-packs onto the healthy lane. The burst
+    drains before the probe cooldown expires, so the lane is still
+    quarantined at the end — probe-back itself is pinned in
+    tests/test_faults.py."""
     sched = sim_sched(max_graphs=1, deadline=0.0, n_lanes=2,
                       service_per_lane=[0.01, 0.1])
     for i in range(40):
         sched.submit(P.make_graph(DS, i))
     sched.drain()
-    assert sched.retired == {1}
+    s = sched.summary()
+    assert s["quarantined_executors"] == [1]
+    assert any(e["kind"] == "quarantine" and e["reason"] == "straggler"
+               for e in sched.events)
+    # the detector's state for the quarantined lane was cleared
+    assert "exec1" not in sched.detector.hosts
     assert sorted(r.req_id for r in sched.responses) == list(range(40))
     slow = [l for l in sched.launches if l["executor"] == 1]
-    assert 1 <= len(slow) <= 3, "slow lane retired after a few launches"
+    assert 1 <= len(slow) <= 3, "slow lane quarantined after a few launches"
     last_seq = max(l["seq"] for l in slow)
     assert all(l["executor"] == 0 for l in sched.launches
                if l["seq"] > last_seq)
 
 
-def test_last_lane_is_never_retired():
+def test_last_lane_is_never_quarantined_for_slowness():
     sched = sim_sched(1.0, max_graphs=1, deadline=0.0)
     for i in range(20):
         sched.submit(P.make_graph(DS, i))
     sched.drain()
-    assert sched.retired == set()
+    assert sched.summary()["quarantined_executors"] == []
     assert len(sched.responses) == 20
 
 
@@ -279,6 +291,34 @@ else:
     @needs_hypothesis
     def test_exactly_once_hypothesis():
         pass  # covered by test_exactly_once_randomized_sweep above
+
+
+def test_run_trace_sorts_unsorted_arrivals():
+    """Regression: an out-of-order trace used to crash run_trace with
+    the opaque "clock cannot run backwards" ValueError. It must now
+    replay exactly like its time-sorted equivalent."""
+    trace = [(t, P.make_graph(DS, i), "default")
+             for i, t in enumerate([0.30, 0.10, 0.20, 0.05])]
+    a = sim_sched(0.01, max_graphs=2, deadline=0.05)
+    S.run_trace(a, trace)
+    b = sim_sched(0.01, max_graphs=2, deadline=0.05)
+    S.run_trace(b, sorted(trace, key=lambda p: p[0]))
+    assert len(a.responses) == len(b.responses) == 4
+    assert sorted((r.arrival_s, r.complete_s) for r in a.responses) \
+        == sorted((r.arrival_s, r.complete_s) for r in b.responses)
+
+
+def test_run_trace_rejects_prehistoric_and_nonfinite_arrivals():
+    """An arrival before the scheduler's clock (or a non-finite one)
+    raises an actionable error naming the offending trace entry."""
+    sched = sim_sched(0.01)
+    sched.clock.advance_to(5.0)
+    with pytest.raises(ValueError, match=r"trace entry #1 .*t=1\.0"):
+        S.run_trace(sched, [(6.0, P.make_graph(DS, 0), "default"),
+                            (1.0, P.make_graph(DS, 1), "default")])
+    with pytest.raises(ValueError, match="entry #0 has non-finite"):
+        S.run_trace(sim_sched(0.01),
+                    [(float("nan"), P.make_graph(DS, 0), "default")])
 
 
 def test_poisson_trace_deterministic():
