@@ -207,7 +207,7 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
                       edge_block: int | None = None,
                       node_block: int | None = None,
                       interpret: bool | None = None,
-                      precision=None):
+                      precision=None, gather_mode: str | None = None):
     """messages: (E, dim) -> (num_segments, dim). seg_ids: (E,) int32;
     padded edges carry seg_ids == num_segments (dropped).
 
@@ -216,6 +216,13 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
     tile sizes (DSE knobs ``edge_block``/``node_block``), "xla" through
     jax.ops.segment_*. Both produce identical results to fp32 tolerance;
     the Pallas path is forward-only (no custom VJP yet).
+
+    gather_mode=None uses the process default ("dma"): the one-hot-free
+    v2 schedule — scalar-prefetched dst stream, double-buffered message
+    DMA, whole-table VMEM accumulators, one sweep over the edge stream
+    (this is the schedule PNA towers and var/std ride). "onehot" keeps
+    the legacy (NB, EB) destination one-hot (GATHER_MODES; the DSE
+    featurizes the choice).
 
     precision (a ``quantization.LayerPrecision``) sets the *storage*
     width of the message tensor: bf16 tiles, or — on the Pallas path —
@@ -243,7 +250,8 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
             messages, seg_ids, valid, num_segments=num_segments, agg=agg,
             edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
             node_block=node_block or _DEFAULT_NODE_BLOCK,
-            interpret=_resolve_interpret(interpret))
+            interpret=_resolve_interpret(interpret),
+            gather_mode=gather_mode or _DEFAULT_GATHER_MODE)
         return out if dequant is None else out * dequant
     if lp is not None and lp.compute == "int8":
         from repro.core import quantization as Q
@@ -364,7 +372,7 @@ def gather_aggregate(agg: str, x, src, dst, num_segments: int, valid=None,
     return segment_aggregate(agg, msg, dst, num_segments, ok,
                              backend=backend, edge_block=edge_block,
                              node_block=node_block, interpret=interpret,
-                             precision=inner_lp)
+                             precision=inner_lp, gather_mode=gather_mode)
 
 
 def segment_counts(seg_ids, num_segments: int, valid=None):

@@ -142,6 +142,20 @@ def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
             "transform_first": stream * out_dim + matmul}
 
 
+def halo_comm_bytes(cut_edges: float, feat_dim: int,
+                    bytes_per_value: float, num_layers: int) -> float:
+    """Modeled inter-device traffic of intra-graph partitioned inference
+    (pipeline.partition_graph): every message-passing boundary except the
+    last exchanges the boundary-node rows the cut edges read, one feature
+    row per cut edge at the layer's storage width. This is the comm-cost
+    term the DSE ``partition`` axis is priced with — the same formula
+    ``GraphPartition.comm_bytes`` reports for a concrete cut, here fed
+    with a modeled cut so the fitted models can featurize designs that
+    were never partitioned."""
+    return float(cut_edges) * feat_dim * bytes_per_value \
+        * max(num_layers - 1, 0)
+
+
 def resolve_dataflow(cfg: ConvConfig) -> str:
     """Planner: the concrete ordering this conv layer executes with."""
     if cfg.dataflow not in DATAFLOWS:

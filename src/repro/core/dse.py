@@ -69,6 +69,12 @@ SPACE = {
     # layers fused per launch by the VMEM-residency kernel (>1 engages
     # apply_packed_resident when convs.residency_plan allows it)
     "fusion_depth": [1, 2, 4],
+    # intra-graph edge-cut partitioning (pipeline.partition_graph): how
+    # many devices one oversize graph is split across, halo rows
+    # exchanged between layers. Priced by the comm-cost term
+    # (convs.halo_comm_bytes); orthogonal to num_shards, which
+    # replicates whole graphs
+    "partition": [1, 2, 4, 8],
 }
 
 
@@ -146,7 +152,8 @@ def synthesize_design(d: dict, build_dir: str, max_nodes: int = 600,
         node_block=d.get("node_block", 128),
         num_shards=d.get("num_shards", 1),
         gather_mode=d.get("gather_mode", "dma"),
-        fusion_depth=d.get("fusion_depth", 1))
+        fusion_depth=d.get("fusion_depth", 1),
+        partition=d.get("partition", 1))
     proj.gen_hw_model()
     report = proj.run_synthesis()
     out = dict(d)

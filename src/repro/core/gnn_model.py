@@ -190,8 +190,16 @@ def packed_inputs(batch: dict) -> tuple:
     node_mask = graph_id < num_graphs
     edge_index = batch["edge_index"]
     valid_e = edge_index[:, 0] >= 0
-    from repro.core.aggregations import degrees
-    indeg, outdeg = degrees(edge_index, x.shape[0], valid_e)
+    # partitioned subgraphs carry precomputed *global* degrees: a halo
+    # row's in-edges live on its owning device, so the locally-counted
+    # degree would be wrong for the GCN norm of cut edges
+    indeg = batch.get("node_in_deg")
+    outdeg = batch.get("node_out_deg")
+    if indeg is None or outdeg is None:
+        from repro.core.aggregations import degrees
+        d_in, d_out = degrees(edge_index, x.shape[0], valid_e)
+        indeg = d_in if indeg is None else indeg
+        outdeg = d_out if outdeg is None else outdeg
     edge_scale, self_scale = C.gcn_normalization(edge_index, indeg, valid_e)
     g = {"edge_index": edge_index, "edge_feat": batch.get("edge_feat"),
          "valid_e": valid_e, "in_deg": indeg, "out_deg": outdeg,
@@ -212,7 +220,7 @@ def resolve_policy(cfg: GNNModelConfig,
 def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
               quant: Q.FPX | None,
               policy: Q.PrecisionPolicy | None = None,
-              record: list | None = None):
+              record: list | None = None, exchange=None):
     """Conv stack + activation + skip, shared by the padded per-graph
     oracle (`apply`) and the packed batch path (`apply_packed`).
 
@@ -221,8 +229,13 @@ def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
     stream / skip / activation stay fp32. record: when a list, appends
     one max-abs scalar per layer (max over the layer's input and conv
     output) — the calibration probe ``activation_ranges`` consumes.
+    exchange: optional (N, F) -> (N, F) hook run between consecutive
+    layers (not after the last) — the partitioned path's halo exchange,
+    which overwrites replicated boundary rows with their owners' values
+    so layer i+1 aggregates over up-to-date neighbors.
     """
-    for i in range(cfg.gnn_num_layers):
+    nl = cfg.gnn_num_layers
+    for i in range(nl):
         cc = cfg.conv_cfg(i)
         p_i = params["convs"][f"c{i}"]
         x_in = x
@@ -246,6 +259,8 @@ def _backbone(params, cfg: GNNModelConfig, g, x, node_mask,
         x = x * node_mask[:, None]
         if quant is not None:
             x = Q.quantize(x, quant)
+        if exchange is not None and i < nl - 1:
+            x = exchange(x)
     return x
 
 
@@ -275,7 +290,8 @@ def apply(params, cfg: GNNModelConfig, batch_el: dict,
 
 
 def apply_packed(params, cfg: GNNModelConfig, batch: dict,
-                 quant: Q.FPX | None = None, policy=None):
+                 quant: Q.FPX | None = None, policy=None, *,
+                 halo_exchange=None, return_node_features: bool = False):
     """Forward a packed GraphBatch — all graphs in one XLA program.
 
     Returns (num_graphs, out_dim) for graph tasks (rows where
@@ -285,6 +301,13 @@ def apply_packed(params, cfg: GNNModelConfig, batch: dict,
     cfg.gnn_precision) selects the per-layer PrecisionPolicy datapath —
     both paths resolve it identically, so padded-vs-packed parity holds
     at every precision.
+
+    halo_exchange: optional between-layer (N, F) -> (N, F) hook (the
+    partitioned path's boundary-row swap; see
+    ``make_partitioned_apply``). return_node_features skips pooling and
+    the head, returning the post-backbone (N, F) node table — the
+    per-device body of the partitioned program, which pools only after
+    reassembling the global node order.
     """
     pol = resolve_policy(cfg, policy)
     pol = None if pol.is_fp32 else pol
@@ -292,8 +315,9 @@ def apply_packed(params, cfg: GNNModelConfig, batch: dict,
     num_graphs = batch["graph_valid"].shape[0]
     if quant is not None:
         x = Q.quantize(x, quant)
-    x = _backbone(params, cfg, g, x, node_mask, quant, pol)
-    if cfg.task == "node":
+    x = _backbone(params, cfg, g, x, node_mask, quant, pol,
+                  exchange=halo_exchange)
+    if cfg.task == "node" or return_node_features:
         return x
     pooled = segment_global_pooling(cfg.global_pooling, x, graph_id,
                                     num_graphs, node_mask)
@@ -484,6 +508,152 @@ def apply_packed_sharded(params, cfg: GNNModelConfig, shards, mesh=None,
         from repro.launch.mesh import make_data_mesh
         mesh = make_data_mesh(stacked["node_feat"].shape[0])
     return make_sharded_apply(cfg, mesh, quant, policy)(params, stacked)
+
+
+def make_partitioned_apply(cfg: GNNModelConfig, mesh,
+                           quant: Q.FPX | None = None, policy=None, *,
+                           out_rows: int | None = None):
+    """Build the jitted SPMD program for intra-graph partitioned
+    inference: ONE oversize graph split into per-device subgraphs
+    (``data.pipeline.partition_graph``) runs over the same 1-D
+    ("data",) mesh as the sharded path.
+
+    The per-device body is ``apply_packed`` unchanged (conv x precision
+    x backend parity by construction) with two additions fused around
+    it:
+
+    * **halo exchange** between conv layers: each device publishes its
+      ``halo_send`` boundary rows, the (halo_budget, F) publish buffers
+      all-gather over "data", and every device overwrites its halo rows
+      (``halo_recv_src``/``halo_recv_dst``; sentinel indices drop) with
+      the owners' freshly-computed values — so layer i+1 aggregates
+      over exact neighbor features despite the edge cut;
+    * **global reassembly** after the last layer: the per-device node
+      tables scatter into global node order via ``node_global_id``
+      (each owned row written exactly once), then the padded oracle's
+      own ``global_pooling`` + head run over the reassembled buffer —
+      which is why partitioned graph outputs match ``apply`` bitwise
+      at fp32.
+
+    The build is TWO programs, not one: the SPMD conv stack over the
+    mesh, and a single-device tail doing the O(out_rows) reassembly +
+    pooling + head. Folding the tail into the SPMD program would
+    replicate its full-graph-sized scatter and reductions on every
+    device — dead weight that grows with the graph while the per-device
+    conv work shrinks with it. The tail is exactly the work the padded
+    oracle's own epilogue pays, paid once.
+
+    out_rows sizes the reassembly buffer; pass the source graph's
+    padded node-buffer row count (``GraphPartition.padded_nodes``) for
+    *bitwise* fp32 parity with the padded oracle — XLA's pooling
+    reduction is shape-sensitive, so reducing over a buffer of any
+    other size matches only to reassociation tolerance. Defaults to
+    ``num_parts * node_budget``.
+
+    Returns ``fn(params, stacked_parts)``: graph tasks yield the
+    (out_dim,) output row, node tasks the (out_rows, F) global-order
+    node table.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import (graph_batch_sharding,
+                                            replicated)
+
+    def per_device(params, batch):
+        b = {k: v[0] for k, v in batch.items()}
+        send = b.pop("halo_send")
+        recv_src = b.pop("halo_recv_src")
+        recv_dst = b.pop("halo_recv_dst")
+        b.pop("node_global_id")
+        b.pop("total_nodes")
+        nb = b["node_feat"].shape[0]
+
+        def exchange(x):
+            ok = send >= 0
+            pub = jnp.where(ok[:, None], x[jnp.clip(send, 0, nb - 1)], 0.0)
+            flat = jax.lax.all_gather(pub, "data").reshape(-1, x.shape[-1])
+            rows = flat[jnp.clip(recv_src, 0, flat.shape[0] - 1)]
+            return x.at[recv_dst].set(rows, mode="drop")
+
+        feats = apply_packed(params, cfg, b, quant, policy,
+                             halo_exchange=exchange,
+                             return_node_features=True)
+        return feats[None]
+
+    conv = shard_map(per_device, mesh=mesh,
+                     in_specs=(P(), P("data")), out_specs=P("data"),
+                     check_rep=False)
+    conv = jax.jit(conv, in_shardings=(replicated(mesh),
+                                       graph_batch_sharding(mesh)))
+
+    def tail(params, tbl, gids, total):
+        fdim = tbl.shape[-1]
+        rows = out_rows or tbl.shape[0] * tbl.shape[1]
+        buf = jnp.zeros((rows, fdim), tbl.dtype)
+        buf = buf.at[gids.reshape(-1)].set(tbl.reshape(-1, fdim),
+                                           mode="drop")
+        if cfg.task == "node":
+            return buf
+        mask = jnp.arange(buf.shape[0]) < total
+        pol = resolve_policy(cfg, policy)
+        pol = None if pol.is_fp32 else pol
+        pooled = global_pooling(cfg.global_pooling, buf, mask)
+        if quant is not None:
+            pooled = Q.quantize(pooled, quant)
+        out = mlp_head_apply(params["mlp"], pooled.astype(buf.dtype),
+                             cfg.mlp_head, quant,
+                             pol.head if pol is not None else None)
+        if cfg.output_activation:
+            out = act(cfg.output_activation)(out)
+        return out
+
+    tail = jax.jit(tail)
+
+    def fn(params, stacked):
+        tbl = conv(params, stacked)                      # (P, NB, F)
+        # total_nodes rides as a traced arg, not a python constant —
+        # every distinct graph size would otherwise recompile the tail
+        return tail(params, tbl,
+                    jnp.asarray(stacked["node_global_id"]),
+                    jnp.asarray(stacked["total_nodes"])[0])
+
+    return fn
+
+
+#: compiled partitioned programs keyed by (config/mesh/quant/policy
+#: identity, out_rows, num_parts); the value holds the keyed objects so
+#: their ids cannot be recycled while the entry lives. Serving calls
+#: ``apply_packed_partitioned`` per oversize request — without this, a
+#: fresh ``jax.jit`` wrapper per call would recompile every time.
+_PARTITIONED_PROGRAMS: dict = {}
+
+
+def apply_packed_partitioned(params, cfg: GNNModelConfig, partition,
+                             mesh=None, quant: Q.FPX | None = None,
+                             policy=None):
+    """One-shot partitioned forward of one oversize graph: stack a
+    ``data.pipeline.GraphPartition``'s parts (or a plain list of
+    same-shape part dicts), run the SPMD conv program + single-device
+    reassembly tail over a ("data",) mesh (built over the first
+    num_parts local devices when ``mesh=None``) and return the graph
+    output row — the padded oracle's answer. The compiled programs are
+    cached per (cfg, mesh, quant, policy, out_rows, num_parts), so
+    serving loops can call this per request without recompiling."""
+    parts = getattr(partition, "parts", partition)
+    out_rows = getattr(partition, "padded_nodes", 0) or None
+    stacked = stack_shards(parts)
+    if mesh is None:
+        from repro.launch.mesh import make_data_mesh
+        mesh = make_data_mesh(len(parts))
+    key = (id(cfg), id(mesh), id(quant), id(policy), out_rows, len(parts))
+    hit = _PARTITIONED_PROGRAMS.get(key)
+    if hit is None:
+        fn = make_partitioned_apply(cfg, mesh, quant, policy,
+                                    out_rows=out_rows)
+        hit = (fn, (cfg, mesh, quant, policy))
+        _PARTITIONED_PROGRAMS[key] = hit
+    return hit[0](params, stacked)
 
 
 def activation_ranges(params, cfg: GNNModelConfig, batch: dict) -> dict:

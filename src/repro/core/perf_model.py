@@ -12,7 +12,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.convs import CONV_TYPES, ConvConfig, resolve_dataflow
+from repro.core.convs import (CONV_TYPES, ConvConfig, halo_comm_bytes,
+                              resolve_dataflow)
 from repro.core.quantization import BYTE_WIDTHS
 
 
@@ -189,6 +190,12 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     # predate both knobs and default to (onehot, depth 1) — exactly what
     # they executed with
     "gather_dma", "fusion_depth",
+    # intra-graph partitioned inference: device count one oversize graph
+    # is split across, plus the modeled per-layer halo exchange volume
+    # (convs.halo_comm_bytes over the balanced worst-case cut at the
+    # design's storage width). Legacy databases predate the knob and
+    # featurize as unpartitioned (partition=1, zero comm bytes)
+    "partition", "halo_comm_bytes",
 ]
 
 
@@ -239,4 +246,22 @@ def features(design: dict) -> np.ndarray:
         1.0 if design.get("num_shards", 1) == 8 else 0.0,
         1.0 if design.get("gather_mode", "onehot") == "dma" else 0.0,
         float(design.get("fusion_depth", 1)),
+        float(design.get("partition", 1)),
+        _halo_comm_bytes(design),
     ], dtype=float)
+
+
+def _halo_comm_bytes(design: dict) -> float:
+    """Modeled partitioned-inference exchange volume for the feature
+    vector: the balanced worst-case cut — (P-1)/P of the per-device edge
+    budget — through convs.halo_comm_bytes at the design's storage
+    width. Zero for unpartitioned designs, including every legacy
+    database row."""
+    p = int(design.get("partition", 1))
+    if p <= 1:
+        return 0.0
+    cut = (p - 1) / p * float(design.get("edge_budget",
+                                         design["avg_edges"]))
+    width = float(BYTE_WIDTHS[design.get("precision", "fp32")])
+    return halo_comm_bytes(cut, design["gnn_hidden_dim"], width,
+                           design["gnn_layers"])

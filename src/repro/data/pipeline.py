@@ -373,6 +373,219 @@ def pack_dataset(graphs, node_budget: int, edge_budget: int,
     return batches, dropped
 
 
+# ------------------------------------------------- intra-graph partition --
+#
+# Giant-graph partitioned inference: one graph larger than the packed
+# node/edge budgets is split into per-device subgraphs under the same
+# per-shard budgets, each carrying a *halo* — replicated boundary-node
+# rows plus a fixed-shape exchange index — so that between
+# message-passing layers the devices swap updated halo features over the
+# ("data",) mesh (gnn_model.apply_packed_partitioned). Edge ownership
+# follows the destination: the owner of an edge's dst holds the edge, so
+# every aggregation is computed entirely on one device and only node
+# *rows* cross the mesh. The exchange is all-gather-of-boundary-rows
+# (point-to-point later); comm volume is what the DSE's `partition` axis
+# prices (convs.halo_comm_bytes).
+
+#: batch keys carried only by partitioned per-device batches (consumed
+#: by the SPMD wrapper, not by apply_packed itself)
+PARTITION_HALO_KEYS = ("halo_send", "halo_recv_src", "halo_recv_dst",
+                       "node_global_id", "total_nodes")
+
+
+@dataclasses.dataclass
+class GraphPartition:
+    """One oversize graph split into ``num_parts`` per-device subgraphs.
+
+    ``parts`` holds per-device GraphBatch dicts (``max_graphs == 1``,
+    identical static shapes) with the standard packed layout — owned
+    rows first, then halo rows, then padding — plus the partition-only
+    keys: ``node_in_deg``/``node_out_deg`` (true *global* degrees, so
+    GCN normalization is exact even for halo sources whose in-edges
+    live on their owner), ``node_global_id`` (reassembly scatter index,
+    out-of-range sentinel on halo/padding rows),
+    ``halo_send`` (owned local rows to publish, -1 pad),
+    ``halo_recv_src`` (index into the (P*halo_budget, F) all-gathered
+    publish buffer), ``halo_recv_dst`` (local halo row to overwrite,
+    sentinel ``node_budget`` pad) and ``total_nodes``."""
+    parts: list
+    num_parts: int
+    total_nodes: int
+    total_edges: int
+    cut_edges: int
+    halo_nodes: int          # total replicated boundary rows across parts
+    node_budget: int
+    edge_budget: int
+    halo_budget: int
+    #: row count of the source graph's padded node buffer — the
+    #: reassembly buffer is sized to it so partitioned pooling reduces
+    #: over the exact same shape as the padded oracle (bitwise parity)
+    padded_nodes: int = 0
+
+    def comm_bytes(self, feat_dim: int, bytes_per_value: float,
+                   num_layers: int) -> float:
+        """Modeled exchange volume: edge-cut x feature bytes per layer
+        boundary (the DSE comm-cost term, convs.halo_comm_bytes)."""
+        return (float(self.cut_edges) * float(feat_dim)
+                * float(bytes_per_value) * max(num_layers - 1, 0))
+
+
+def partition_graph(g: Graph, num_parts: int, node_budget: int,
+                    edge_budget: int, halo_budget: int | None = None
+                    ) -> GraphPartition:
+    """Greedy edge-cut partition of one graph into ``num_parts``
+    per-device subgraphs under the per-shard budgets.
+
+    Nodes are streamed in BFS order (lowest unvisited id seeds each
+    component) and assigned to the part holding most of their
+    already-assigned neighbors (LDG-style greedy, capacity
+    ``ceil(n / num_parts)``; ties go to the least-loaded part). BFS
+    order makes the greedy fill each part with one connected region,
+    so the cut is the BFS frontier at each capacity boundary rather
+    than a random bisection of every edge. Each edge is owned by the owner of its
+    *destination*, so a destination's full in-neighborhood reduces on
+    one device and only boundary-node rows are exchanged. Raises
+    ``ValueError`` when any part would exceed a budget (owned + halo
+    rows > node_budget, owned edges > edge_budget, or boundary rows >
+    halo_budget) — the caller falls back to the padded oracle."""
+    if num_parts < 1:
+        raise ValueError(f"num_parts must be >= 1, got {num_parts}")
+    if halo_budget is None:
+        halo_budget = node_budget
+    n, e = int(g.num_nodes), int(g.num_edges)
+    src = np.asarray(g.edge_index[:e, 0], np.int64)
+    dst = np.asarray(g.edge_index[:e, 1], np.int64)
+    # -- greedy LDG node assignment -------------------------------------
+    own_cap = max(-(-n // num_parts), 1)
+    owner = np.full((n,), -1, np.int64)
+    owned_count = np.zeros((num_parts,), np.int64)
+    neighbors: list = [[] for _ in range(n)]
+    for s, d in zip(src, dst):
+        neighbors[s].append(int(d))
+        neighbors[d].append(int(s))
+    order: list = []
+    visited = np.zeros((n,), bool)
+    for seed in range(n):
+        if visited[seed]:
+            continue
+        visited[seed] = True
+        frontier = [seed]
+        while frontier:
+            v = frontier.pop(0)
+            order.append(v)
+            for u in sorted(set(neighbors[v])):
+                if not visited[u]:
+                    visited[u] = True
+                    frontier.append(u)
+    for v in order:
+        score = np.zeros((num_parts,), np.int64)
+        for u in neighbors[v]:
+            if owner[u] >= 0:
+                score[owner[u]] += 1
+        score[owned_count >= own_cap] = -1
+        cands = np.flatnonzero(score == score.max())
+        p = int(min(cands, key=lambda c: (owned_count[c], c)))
+        owner[v] = p
+        owned_count[p] += 1
+    # -- edge ownership + halo sets -------------------------------------
+    edge_owner = owner[dst] if e else np.zeros((0,), np.int64)
+    cut = int(np.sum(owner[src] != owner[dst])) if e else 0
+    indeg = np.bincount(dst, minlength=n).astype(np.float32) if n else \
+        np.zeros((0,), np.float32)
+    outdeg = np.bincount(src, minlength=n).astype(np.float32) if n else \
+        np.zeros((0,), np.float32)
+    owned_nodes = [np.flatnonzero(owner == p) for p in range(num_parts)]
+    edge_rows = [np.flatnonzero(edge_owner == p) for p in range(num_parts)]
+    halo_nodes = []
+    for p in range(num_parts):
+        rows = edge_rows[p]
+        remote = src[rows][owner[src[rows]] != p] if rows.size else \
+            np.zeros((0,), np.int64)
+        halo_nodes.append(np.unique(remote))
+    send_nodes = []
+    for p in range(num_parts):
+        needed = [h[owner[h] == p] for h in halo_nodes]
+        send_nodes.append(np.unique(np.concatenate(needed)) if needed
+                          else np.zeros((0,), np.int64))
+    for p in range(num_parts):
+        n_own, n_halo = len(owned_nodes[p]), len(halo_nodes[p])
+        if n_own + n_halo > node_budget:
+            raise ValueError(
+                f"part {p}: {n_own} owned + {n_halo} halo rows exceed "
+                f"node_budget {node_budget}")
+        if len(edge_rows[p]) > edge_budget:
+            raise ValueError(
+                f"part {p}: {len(edge_rows[p])} owned edges exceed "
+                f"edge_budget {edge_budget}")
+        if max(n_halo, len(send_nodes[p])) > halo_budget:
+            raise ValueError(
+                f"part {p}: {max(n_halo, len(send_nodes[p]))} boundary "
+                f"rows exceed halo_budget {halo_budget}")
+    # -- per-part batches ------------------------------------------------
+    f = g.node_feat.shape[1]
+    fe = g.edge_feat.shape[1]
+    t = g.y.shape[0]
+    # out-of-range for any reassembly buffer: the drop-mode scatter
+    # ignores halo/padding rows no matter how the buffer is sized
+    gid_sentinel = np.int32(2 ** 30)
+    # global node id -> (part-local send position) for recv_src lookup
+    send_pos = {}
+    for p in range(num_parts):
+        for j, v in enumerate(send_nodes[p]):
+            send_pos[int(v)] = p * halo_budget + j
+    parts = []
+    for p in range(num_parts):
+        own = owned_nodes[p]
+        halo = halo_nodes[p]
+        n_own, n_halo = len(own), len(halo)
+        local = np.full((max(n, 1),), -1, np.int64)
+        local[own] = np.arange(n_own)
+        local[halo] = n_own + np.arange(n_halo)
+        batch = empty_graph_batch(node_budget, edge_budget, 1, f, fe, t)
+        batch["node_feat"][:n_own] = g.node_feat[own]
+        batch["node_feat"][n_own:n_own + n_halo] = g.node_feat[halo]
+        batch["node_graph_id"][:n_own + n_halo] = 0
+        rows = edge_rows[p]
+        ne = len(rows)
+        batch["edge_index"][:ne, 0] = local[src[rows]]
+        batch["edge_index"][:ne, 1] = local[dst[rows]]
+        batch["edge_feat"][:ne] = g.edge_feat[rows]
+        batch["edge_graph_id"][:ne] = 0
+        batch["graph_valid"][0] = True
+        batch["graph_num_nodes"][0] = n_own + n_halo
+        batch["num_graphs"] = np.int32(1)
+        batch["y"][0] = g.y
+        # true global degrees for every active local row (owned + halo)
+        deg_in = np.zeros((node_budget,), np.float32)
+        deg_out = np.zeros((node_budget,), np.float32)
+        deg_in[:n_own] = indeg[own]
+        deg_in[n_own:n_own + n_halo] = indeg[halo]
+        deg_out[:n_own] = outdeg[own]
+        deg_out[n_own:n_own + n_halo] = outdeg[halo]
+        batch["node_in_deg"] = deg_in
+        batch["node_out_deg"] = deg_out
+        gid = np.full((node_budget,), gid_sentinel, np.int32)
+        gid[:n_own] = own
+        batch["node_global_id"] = gid
+        hs = np.full((halo_budget,), -1, np.int32)
+        hs[:len(send_nodes[p])] = local[send_nodes[p]]
+        batch["halo_send"] = hs
+        hr_src = np.zeros((halo_budget,), np.int32)
+        hr_dst = np.full((halo_budget,), node_budget, np.int32)
+        for j, v in enumerate(halo):
+            hr_src[j] = send_pos[int(v)]
+            hr_dst[j] = n_own + j
+        batch["halo_recv_src"] = hr_src
+        batch["halo_recv_dst"] = hr_dst
+        batch["total_nodes"] = np.int32(n)
+        parts.append(batch)
+    return GraphPartition(
+        parts=parts, num_parts=num_parts, total_nodes=n, total_edges=e,
+        cut_edges=cut, halo_nodes=int(sum(len(h) for h in halo_nodes)),
+        node_budget=node_budget, edge_budget=edge_budget,
+        halo_budget=halo_budget, padded_nodes=int(g.node_feat.shape[0]))
+
+
 def graph_batch_packed(cfg: GraphDataConfig, step: int, node_budget: int,
                        edge_budget: int, max_graphs: int) -> dict:
     """Deterministic step-indexed packed batch: the candidate window is

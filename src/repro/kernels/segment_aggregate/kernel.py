@@ -25,6 +25,21 @@ is fp32 regardless (int8 sums are integer-valued fp32, i.e. exact
 int32-style accumulation). Low-precision inputs are dequantized by the
 caller (core.aggregations folds the per-tensor scale onto the output);
 the output is always fp32.
+
+Two generations live here, mirroring ``fused_gather_aggregate``
+(docs/KERNELS.md has the full contract):
+
+* ``segment_aggregate_pallas`` — the **legacy one-hot** schedule
+  (``gather_mode="onehot"``): a (NB, EB) destination one-hot routes the
+  scatter through the MXU / a masked VPU reduce, costing O(NB * EB * F)
+  per tile pair and re-sweeping the edge stream once per node tile.
+* ``segment_aggregate_v2_pallas`` — the **DMA** schedule
+  (``gather_mode="dma"``, the default): the dst id stream is
+  scalar-prefetched into SMEM (PrefetchScalarGridSpec), message tiles
+  are double-buffered HBM->VMEM by explicit async copies at storage
+  width, and the whole (num_segments, F) accumulator — including the
+  Welford mean/M2 pair for var/std — is VMEM-resident, so the edge
+  stream is swept exactly once with no one-hot ever materialized.
 """
 from __future__ import annotations
 
@@ -161,3 +176,155 @@ def segment_aggregate_pallas(messages, seg_ids, num_segments: int, *,
         interpret=interpret,
     )(messages, dst)
     return out[:num_segments]
+
+
+# ----------------------------------------------------------- segment v2 --
+def _seg_v2_kernel(dst_ref, msg_hbm, out_ref, sbuf, sems, cnt_ref,
+                   mean_ref, m2_ref, *, agg: str, edge_steps: int,
+                   eb: int):
+    """One grid step folds one message tile into the resident table.
+
+    dst_ref is the *whole* id stream in SMEM (scalar prefetch); msg_hbm
+    stays in HBM (memory_space=ANY) and is copied one edge block ahead
+    of compute through the two-slot region of ``sbuf`` (a (2*EB, F)
+    VMEM scratch at the message storage width) — the double-buffered
+    HBM->VMEM edge pipeline. out_ref and the Welford mean/M2 scratch are
+    whole-table VMEM residents, so the edge stream is swept once."""
+    j = pl.program_id(0)
+
+    def dma(slot, step):
+        return pltpu.make_async_copy(
+            msg_hbm.at[pl.ds(step * eb, eb), :],
+            sbuf.at[pl.ds(slot * eb, eb), :], sems.at[slot])
+
+    @pl.when(j == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        if agg == "min":
+            out_ref[...] = jnp.full(out_ref.shape, jnp.inf, out_ref.dtype)
+        elif agg == "max":
+            out_ref[...] = jnp.full(out_ref.shape, -jnp.inf,
+                                    out_ref.dtype)
+        else:
+            out_ref[...] = jnp.zeros_like(out_ref)
+        if agg in ("var", "std"):
+            mean_ref[...] = jnp.zeros_like(mean_ref)
+            m2_ref[...] = jnp.zeros_like(m2_ref)
+        dma(0, 0).start()
+
+    slot = jax.lax.rem(j, 2)
+
+    @pl.when(j + 1 < edge_steps)
+    def _prefetch_next():
+        dma(1 - slot, j + 1).start()
+
+    dma(slot, j).wait()
+
+    base = j * eb
+
+    def body(e, _):
+        d = dst_ref[base + e]
+        dl = jnp.maximum(d, 0)
+        ok = d >= 0
+        row = sbuf[pl.ds(slot * eb + e, 1), :].astype(jnp.float32)
+        if agg in ("sum", "mean"):
+            cur = out_ref[pl.ds(dl, 1), :]
+            out_ref[pl.ds(dl, 1), :] = \
+                jnp.where(ok, cur + row, cur)
+        elif agg in ("min", "max"):
+            cur = out_ref[pl.ds(dl, 1), :]
+            upd = jnp.minimum(cur, row) if agg == "min" \
+                else jnp.maximum(cur, row)
+            out_ref[pl.ds(dl, 1), :] = jnp.where(ok, upd, cur)
+        else:                               # Welford mean / M2
+            c = cnt_ref[pl.ds(dl, 1), :]
+            c_new = c + jnp.where(ok, 1.0, 0.0)
+            mean = mean_ref[pl.ds(dl, 1), :]
+            delta = row - mean
+            mean_new = mean + jnp.where(
+                ok, delta / jnp.maximum(c_new, 1.0), 0.0)
+            m2 = m2_ref[pl.ds(dl, 1), :]
+            mean_ref[pl.ds(dl, 1), :] = mean_new
+            m2_ref[pl.ds(dl, 1), :] = \
+                m2 + jnp.where(ok, delta * (row - mean_new), 0.0)
+            cnt_ref[pl.ds(dl, 1), :] = c_new
+        if agg in ("mean", "min", "max"):
+            c = cnt_ref[pl.ds(dl, 1), :]
+            cnt_ref[pl.ds(dl, 1), :] = c + jnp.where(ok, 1.0, 0.0)
+        return 0
+
+    jax.lax.fori_loop(0, eb, body, 0)
+
+    @pl.when(j == edge_steps - 1)
+    def _finalize():
+        if agg == "mean":
+            out_ref[...] = out_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+        elif agg in ("min", "max"):
+            o = out_ref[...]
+            out_ref[...] = jnp.where(jnp.isfinite(o), o, 0.0)
+        elif agg in ("var", "std"):
+            var = m2_ref[...] / jnp.maximum(cnt_ref[...], 1.0)
+            var = jnp.maximum(var, 1e-12)   # clamp: sqrt'(0)=inf -> NaNs
+            out_ref[...] = jnp.sqrt(var) if agg == "std" else var
+
+
+def segment_aggregate_v2_pallas(messages, seg_ids, num_segments: int, *,
+                                agg: str = "sum", edge_block: int = 128,
+                                node_block: int = 128,
+                                interpret: bool = True):
+    """One-hot-free segment aggregation (``gather_mode="dma"``, the
+    default) — same contract as ``segment_aggregate_pallas`` (messages
+    (E, F) at fp32/bf16/int8 storage width, fp32 accumulation, seg_ids
+    (E,) with -1/out-of-range = padding, (num_segments, F) float32 out,
+    empty segments zero-fill) — but a different machine: the dst stream
+    rides in SMEM via scalar prefetch, message tiles are double-buffered
+    HBM->VMEM by explicit async copies, and the whole accumulator table
+    (plus the Welford mean/M2 pair for var/std) is VMEM-resident, so the
+    edge stream is swept exactly once (``node_block`` is accepted for
+    knob compatibility and ignored).
+
+    Grid: (edge_tiles,). Scratch: two-slot (2*EB, F) message buffer at
+    storage width + a DMA semaphore pair + the (num_segments, 1) count
+    column + (num_segments, F) Welford mean/M2 for var/std.
+    """
+    assert agg in AGGS, agg
+    del node_block                       # v2 keeps the whole table
+    e, f = messages.shape
+    if e == 0 or num_segments == 0:
+        return jnp.zeros((num_segments, f), jnp.float32)
+    seg_ids = seg_ids.astype(jnp.int32)
+    seg_ids = jnp.where((seg_ids >= 0) & (seg_ids < num_segments),
+                        seg_ids, -1)
+    eb = min(edge_block, e)
+    e_pad = (-e) % eb
+    if e_pad:
+        messages = jnp.pad(messages, ((0, e_pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, e_pad), constant_values=-1)
+    steps = (e + e_pad) // eb
+    welford = agg in ("var", "std")
+    track_count = agg != "sum"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # messages stay HBM
+        ],
+        out_specs=pl.BlockSpec((num_segments, f),
+                               lambda j, d_r: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2 * eb, f), messages.dtype),  # two-slot buffer
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((num_segments if track_count else 8, 1),
+                       jnp.float32),
+            pltpu.VMEM((num_segments if welford else 8, f), jnp.float32),
+            pltpu.VMEM((num_segments if welford else 8, f), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_seg_v2_kernel, agg=agg, edge_steps=steps,
+                          eb=eb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, f), jnp.float32),
+        interpret=interpret,
+    )(seg_ids, messages)
+    return out

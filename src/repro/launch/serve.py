@@ -10,9 +10,12 @@ GraphBatch programs — one jitted program, budget-sized buffers, reported
 in graphs/s (DESIGN_BATCHING.md). Admission mirrors the continuous
 scheduler's statuses: malformed graphs are rejected explicitly
 (``rejected_invalid``, data.pipeline.validate_graph), and requests too
-large for the packed budgets are answered through the padded per-graph
-oracle — or, with no fallback program, get per-request
-``rejected_oversize`` outcomes, never a silent drop. ``--precision``
+large for the packed budgets split across the local device pool through
+the intra-graph partitioned SPMD program when >= 2 devices exist
+(``partitioned_served``; halo exchange between layers, docs/SERVING.md)
+— the padded per-graph oracle stays as the no-mesh fallback
+(``fallback_served``), and with neither program oversize requests get
+per-request ``rejected_oversize`` outcomes, never a silent drop. ``--precision``
 serves through
 a low-precision PrecisionPolicy datapath (bf16 / int8 tiles, fp32
 accumulation; int8 grids are max-abs calibrated on the warmup batch) and
@@ -73,16 +76,23 @@ def _fallback_input(g) -> dict:
 
 
 def _admit(queue, node_budget: int, edge_budget: int, *,
-           can_fallback: bool, validate: bool = True):
+           can_fallback: bool, can_partition: bool = False,
+           validate: bool = True):
     """Admission screen of the wave drains, mirroring the continuous
     scheduler's ``submit``: every request is routed to exactly one
-    outcome up front — packable, oversize-via-fallback, or an explicit
-    per-request rejection (``rejected_oversize`` when no fallback
-    program exists, ``rejected_invalid`` when ``validate_graph`` says the
-    graph is malformed) — never a silent drop. Returns
-    (packable, oversize, outcomes); ``outcomes[i]`` carries the queue
-    index, the status (continuous-scheduler status names), and a reason
-    for rejections."""
+    outcome up front — packable, oversize (answered by the partitioned
+    SPMD program when ``can_partition``, else the padded fallback), or
+    an explicit per-request rejection (``rejected_oversize`` when
+    neither oversize program exists, ``rejected_invalid`` when
+    ``validate_graph`` says the graph is malformed) — never a silent
+    drop. The classification is *mesh-aware*: ``can_partition`` is the
+    same predicate the continuous scheduler's executors advertise, so
+    the wave drains and the scheduler agree on which program answers an
+    oversize request. Returns (packable, oversize, outcomes);
+    ``outcomes[i]`` carries the queue index, the status
+    (continuous-scheduler status names — oversize statuses are the
+    *planned* route, reconciled to the actual one after launch), and a
+    reason for rejections."""
     from repro.data import pipeline as P
     from repro.runtime import scheduler as S
     packable, oversize, outcomes = [], [], []
@@ -96,17 +106,32 @@ def _admit(queue, node_budget: int, edge_budget: int, *,
         if P.graph_fits_budget(g, node_budget, edge_budget):
             packable.append(g)
             outcomes.append({"index": i, "status": S.SERVED_PACKED})
-        elif can_fallback:
+        elif can_partition or can_fallback:
             oversize.append(g)
-            outcomes.append({"index": i, "status": S.SERVED_FALLBACK})
+            outcomes.append({"index": i, "status":
+                             S.SERVED_PARTITIONED if can_partition
+                             else S.SERVED_FALLBACK})
         else:
             outcomes.append({
                 "index": i, "status": S.REJECTED_OVERSIZE,
                 "reason": f"{g.num_nodes} nodes/{g.num_edges} edges exceed "
                           f"the packed budgets ({node_budget} nodes/"
-                          f"{edge_budget} edges) and no fallback program "
-                          "is available"})
+                          f"{edge_budget} edges) and no partitioned or "
+                          "fallback program is available"})
     return packable, oversize, outcomes
+
+
+def _reconcile_oversize(outcomes, over_status):
+    """Rewrite the oversize outcomes' *planned* route with the actual
+    post-launch one (partition infeasibility reroutes a graph to the
+    padded fallback, or to an explicit rejection when none exists), so
+    ``outcomes`` and the partitioned/fallback counts always agree."""
+    from repro.runtime import scheduler as S
+    it = iter(over_status)
+    for o in outcomes:
+        if o["status"] in (S.SERVED_PARTITIONED, S.SERVED_FALLBACK):
+            o["status"] = next(it)
+    return outcomes
 
 
 def _rejection_stats(stats: dict, outcomes) -> dict:
@@ -123,15 +148,22 @@ def _rejection_stats(stats: dict, outcomes) -> dict:
 
 
 def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
-                   graphs_in, slots_in, slot_capacity: int):
+                   graphs_in, slots_in, slot_capacity: int,
+                   partition_fn=None):
     """Shared pack-and-launch body of the wave drains (and of anything
     else that runs a prepacked batch list): run every batch through
-    ``run_batch``, answer oversize requests through ``fallback_fn`` (the
-    padded per-graph oracle on a ``_fallback_input`` dict) when one is
-    supplied, block, and account. ``graphs_in``/``slots_in`` count the
-    graphs and occupied node slots of one batch (they differ between the
-    single-device and sharded layouts). Returns
-    (batch_outs, fallback_outs, stats)."""
+    ``run_batch``, answer oversize requests through ``partition_fn``
+    (the intra-graph partitioned SPMD program; returns None when the
+    graph cannot split under the per-device budgets) and ``fallback_fn``
+    (the padded per-graph oracle on a ``_fallback_input`` dict), block,
+    and account. Each oversize graph resolves to exactly one of
+    partitioned / fallback / rejected-oversize — never double-counted.
+    ``graphs_in``/``slots_in`` count the graphs and occupied node slots
+    of one batch (they differ between the single-device and sharded
+    layouts). Returns (batch_outs, oversize_outs, oversize_statuses,
+    stats); ``oversize_outs``/``oversize_statuses`` line up with
+    ``oversize`` (rejected graphs carry a None output)."""
+    from repro.runtime import scheduler as S
     outs = []
     served = 0
     slots_used = 0
@@ -140,27 +172,40 @@ def _launch_packed(run_batch, batches, oversize, fallback_fn, *,
         outs.append(run_batch(b))
         served += graphs_in(b)
         slots_used += slots_in(b)
-    fallback_outs = []
-    if fallback_fn is not None:
-        fallback_outs = [fallback_fn(_fallback_input(g)) for g in oversize]
-    jax.block_until_ready(outs + fallback_outs)
+    over_outs, over_status = [], []
+    for g in oversize:
+        out = None if partition_fn is None else partition_fn(g)
+        if out is not None:
+            over_outs.append(out)
+            over_status.append(S.SERVED_PARTITIONED)
+        elif fallback_fn is not None:
+            over_outs.append(fallback_fn(_fallback_input(g)))
+            over_status.append(S.SERVED_FALLBACK)
+        else:
+            over_outs.append(None)
+            over_status.append(S.REJECTED_OVERSIZE)
+    live = [o for o in over_outs if o is not None]
+    jax.block_until_ready(outs + live)
     total_s = time.perf_counter() - t0
-    n_fallback = len(fallback_outs)
+    n_part = over_status.count(S.SERVED_PARTITIONED)
+    n_fallback = over_status.count(S.SERVED_FALLBACK)
     stats = {
-        "served": served + n_fallback,
+        "served": served + n_part + n_fallback,
         "packed_served": served,
+        "partitioned_served": n_part,
         "fallback_served": n_fallback,
         "n_batches": len(batches),
-        "graphs_per_s": (served + n_fallback) / max(total_s, 1e-12),
+        "graphs_per_s": (served + n_part + n_fallback)
+        / max(total_s, 1e-12),
         "node_slot_utilization": slots_used / max(slot_capacity, 1),
         "total_s": total_s,
     }
-    return outs, fallback_outs, stats
+    return outs, over_outs, over_status, stats
 
 
 def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
                     batch_graphs: int, fallback_fn=None, *,
-                    validate: bool = True):
+                    partition_fn=None, validate: bool = True):
     """Synchronous wave drain of ``queue`` (a list of data.pipeline.Graph
     requests) through the packed program ``fn``; every call sees the same
     static shapes, so XLA compiles exactly once. Returns
@@ -169,15 +214,19 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
     Request lifecycle (docs/SERVING.md): requests that fit the budgets
     are greedily packed into fixed-shape GraphBatches and answered by
     the packed program. Requests too large for the budgets cannot ride
-    a GraphBatch; with ``fallback_fn`` (the padded per-graph oracle
-    ``G.apply``, jitted) each one is answered individually through it,
-    so every request gets a response and ``stats["fallback_served"]``
-    counts them. Without a fallback program each oversize request gets
-    an explicit per-request ``rejected_oversize`` outcome, and malformed
-    graphs get ``rejected_invalid`` (``validate=False`` skips the
-    screen) — ``stats["outcomes"]`` lists every request's status under
-    the same names the continuous scheduler uses, and
-    ``stats["dropped"]`` stays as a legacy alias of
+    a GraphBatch; with ``partition_fn`` (the intra-graph partitioned
+    SPMD program, ``G.apply_packed_partitioned`` behind a
+    graph -> output-or-None callable) each one splits across the device
+    mesh and ``stats["partitioned_served"]`` counts them; with
+    ``fallback_fn`` (the padded per-graph oracle ``G.apply``, jitted)
+    graphs the partitioner cannot split — or every oversize graph when
+    no mesh exists — are answered individually through it
+    (``stats["fallback_served"]``). Without either program each
+    oversize request gets an explicit per-request ``rejected_oversize``
+    outcome, and malformed graphs get ``rejected_invalid``
+    (``validate=False`` skips the screen) — ``stats["outcomes"]`` lists
+    every request's status under the same names the continuous
+    scheduler uses, and ``stats["dropped"]`` stays as a legacy alias of
     ``rejected_oversize``.
 
     This drain is the offline-throughput baseline (and parity oracle)
@@ -187,23 +236,28 @@ def drain_gnn_queue(fn, params, queue, node_budget: int, edge_budget: int,
     from repro.data import pipeline as P
     packable, oversize, outcomes = _admit(
         queue, node_budget, edge_budget,
-        can_fallback=fallback_fn is not None, validate=validate)
+        can_fallback=fallback_fn is not None,
+        can_partition=partition_fn is not None, validate=validate)
     batches, leftover = P.pack_dataset(packable, node_budget, edge_budget,
                                        batch_graphs)
     assert not leftover, "_admit already screened for budget fit"
-    outs, fallback_outs, stats = _launch_packed(
+    outs, over_outs, over_status, stats = _launch_packed(
         lambda b: fn(params, G.packed_to_device(b)), batches, oversize,
         None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
+        partition_fn=partition_fn,
         graphs_in=lambda b: int(b["num_graphs"]),
         slots_in=lambda b: int((b["node_graph_id"] < batch_graphs).sum()),
         slot_capacity=len(batches) * node_budget)
-    return outs + fallback_outs, _rejection_stats(stats, outcomes)
+    _reconcile_oversize(outcomes, over_status)
+    return outs + [o for o in over_outs if o is not None], \
+        _rejection_stats(stats, outcomes)
 
 
 def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
                             edge_budget: int, batch_graphs: int,
                             num_shards: int, fallback_fn=None,
-                            task: str = "graph", *, validate: bool = True):
+                            task: str = "graph", *, partition_fn=None,
+                            validate: bool = True):
     """Sharded wave drain: requests are partitioned into per-device shard
     waves (data.pipeline.pack_dataset(num_shards=)) and each wave runs
     as one SPMD program over the ("data",) mesh — ``fn`` from
@@ -211,38 +265,56 @@ def drain_gnn_queue_sharded(fn, params, queue, node_budget: int,
     outputs come back in wave host order (gather_shard_outputs); node
     tasks (``task="node"``) get the raw stacked per-shard node tables
     per wave — their row order is shard-local, so there is no global
-    host order to restore. The oversize padded fallback behaves exactly
-    as in ``drain_gnn_queue`` (same ``_launch_packed`` body), and so do
-    the explicit per-request rejection outcomes (same ``_admit``
+    host order to restore. Oversize requests behave exactly as in
+    ``drain_gnn_queue`` (same ``_launch_packed`` body: partitioned SPMD
+    program first, padded fallback second, explicit rejection last),
+    and so do the per-request rejection outcomes (same ``_admit``
     screen)."""
     from repro.core import gnn_model as G
     from repro.data import pipeline as P
     packable, oversize, outcomes = _admit(
         queue, node_budget, edge_budget,
-        can_fallback=fallback_fn is not None, validate=validate)
+        can_fallback=fallback_fn is not None,
+        can_partition=partition_fn is not None, validate=validate)
     waves, leftover = P.pack_dataset(packable, node_budget, edge_budget,
                                      batch_graphs, num_shards=num_shards)
     assert not leftover, "_admit already screened for budget fit"
-    dev_outs, fallback_outs, stats = _launch_packed(
+    dev_outs, over_outs, over_status, stats = _launch_packed(
         lambda w: fn(params, G.stack_shards(w)), waves, oversize,
         None if fallback_fn is None else (lambda el: fallback_fn(params, el)),
+        partition_fn=partition_fn,
         graphs_in=lambda w: w.n_graphs,
         slots_in=lambda w: sum(int((b["node_graph_id"]
                                     < batch_graphs).sum())
                                for b in w.shards),
         slot_capacity=len(waves) * num_shards * node_budget)
     stats["num_shards"] = num_shards
+    _reconcile_oversize(outcomes, over_status)
     if task == "graph":
         outs = [P.gather_shard_outputs(np.asarray(o), w.index)
                 for w, o in zip(waves, dev_outs)]
     else:
         outs = dev_outs
-    return outs + fallback_outs, _rejection_stats(stats, outcomes)
+    return outs + [o for o in over_outs if o is not None], \
+        _rejection_stats(stats, outcomes)
+
+
+def _partition_or_infeasible(partition_fn, g):
+    """Adapt the wave drains' graph -> output-or-None partition callable
+    to the continuous scheduler's executor protocol, where infeasibility
+    is the explicit ``PartitionInfeasible`` routing signal."""
+    from repro.runtime import scheduler as S
+    out = partition_fn(g)
+    if out is None:
+        raise S.PartitionInfeasible(
+            f"{g.num_nodes} nodes/{g.num_edges} edges cannot split under "
+            "the per-device budgets")
+    return out
 
 
 def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
                                edge_budget: int, batch_graphs: int,
-                               fallback_fn=None, *,
+                               fallback_fn=None, *, partition_fn=None,
                                load_graphs_per_s: float = 512.0,
                                deadline_s: float = 0.05,
                                max_queue_depth: int = 1024,
@@ -258,7 +330,10 @@ def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
     statistics are traffic-shaped, the compute cost is real, and the
     outputs are the real program's outputs (parity with the wave
     drain). Batches launch on deadline expiry or budget-full; oversize
-    requests ride ``fallback_fn``; admissions beyond ``max_queue_depth``
+    requests ride ``partition_fn`` (the intra-graph partitioned SPMD
+    program; raise ``scheduler.PartitionInfeasible`` inside it to
+    reroute a graph to the oracle) then ``fallback_fn``; admissions
+    beyond ``max_queue_depth``
     (or malformed graphs, when ``validate``) are rejected explicitly.
     The fault-tolerance knobs ride through: a launch not complete
     within ``launch_timeout_s`` of virtual time fails as a hang and its
@@ -279,7 +354,10 @@ def drain_gnn_queue_continuous(fn, params, queue, node_budget: int,
         batch_fn=lambda b: np.asarray(jax.block_until_ready(
             fn(params, G.packed_to_device(b)))),
         fallback_fn=None if fallback_fn is None else (lambda g: np.asarray(
-            jax.block_until_ready(fallback_fn(params, _fallback_input(g))))))
+            jax.block_until_ready(fallback_fn(params, _fallback_input(g))))),
+        partition_fn=None if partition_fn is None else (
+            lambda g: np.asarray(jax.block_until_ready(
+                _partition_or_infeasible(partition_fn, g)))))
     sched = S.ContinuousScheduler(
         S.SchedulerConfig(node_budget, edge_budget, batch_graphs,
                           max_queue_depth=max_queue_depth,
@@ -316,6 +394,19 @@ def gnn_main(args):
     node_budget = P.size_budget(args.batch_graphs, ds.avg_nodes)
     edge_budget = P.size_budget(args.batch_graphs,
                                 ds.avg_nodes * ds.avg_degree)
+    if args.oversize_requests > 0:
+        # giant-graph traffic: requests that exceed the packed budgets
+        # and exercise the oversize lifecycle (partitioned mesh program,
+        # else padded oracle — docs/SERVING.md). 1.2x the node budget
+        # keeps ceil(n/P) owned rows + the BFS-frontier halo inside the
+        # per-device budget even on a 2-device mesh
+        big_cfg = dataclasses.replace(
+            ds, avg_nodes=int(1.2 * node_budget),
+            max_nodes=max(ds.max_nodes, 4 * node_budget),
+            max_edges=max(ds.max_edges, 4 * edge_budget),
+            seed=ds.seed + 0x0B1)
+        queue += [P.make_graph(big_cfg, i)
+                  for i in range(args.oversize_requests)]
     # precision datapath: resolve the policy once; int8 grids are
     # max-abs calibrated on the warmup window. Oversize requests can't
     # ride a GraphBatch (pack_graphs would raise on them) — they are
@@ -337,6 +428,26 @@ def gnn_main(args):
     # request is answered, not silently dropped
     fallback_fn = jax.jit(lambda p, el: G.apply(p, cfg, el, None, policy))
 
+    # mesh-aware oversize routing: with >= 2 local devices, oversize
+    # graphs split across the whole device pool and run through the
+    # partitioned SPMD program (apply_packed_partitioned); the padded
+    # oracle stays as the no-mesh fallback and the escape hatch for
+    # graphs the partitioner cannot split under the per-device budgets
+    partition_fn = None
+    n_dev = len(jax.devices())
+    if n_dev >= 2:
+        from repro.launch.mesh import make_data_mesh
+        part_mesh = make_data_mesh(n_dev)
+
+        def partition_fn(g):
+            try:
+                part = P.partition_graph(g, n_dev, node_budget,
+                                         edge_budget)
+            except ValueError:
+                return None
+            return G.apply_packed_partitioned(params, cfg, part,
+                                              part_mesh, None, policy)
+
     if args.scheduler == "continuous" and args.shards > 1:
         raise SystemExit("--scheduler continuous drives a single-host "
                          "executor; drop --shards or use --scheduler wave")
@@ -352,12 +463,12 @@ def gnn_main(args):
             return drain_gnn_queue_sharded(
                 sharded_fn, params, q, node_budget, edge_budget,
                 args.batch_graphs, args.shards, fallback_fn,
-                task=cfg.task)
+                task=cfg.task, partition_fn=partition_fn)
     else:
         def drain(q):
             return drain_gnn_queue(fn, params, q, node_budget,
                                    edge_budget, args.batch_graphs,
-                                   fallback_fn)
+                                   fallback_fn, partition_fn=partition_fn)
 
     # warmup: compile the single fixed-shape program
     _, _ = drain(warm)
@@ -367,7 +478,7 @@ def gnn_main(args):
         # clock, measured service times, deadline/budget-full launches
         _, stats = drain_gnn_queue_continuous(
             fn, params, queue, node_budget, edge_budget,
-            args.batch_graphs, fallback_fn,
+            args.batch_graphs, fallback_fn, partition_fn=partition_fn,
             load_graphs_per_s=args.load, deadline_s=args.deadline_ms / 1e3,
             max_queue_depth=args.queue_depth,
             launch_timeout_s=(args.launch_timeout_ms / 1e3
@@ -386,6 +497,8 @@ def gnn_main(args):
               f"p99 {ms(stats['p99_latency_s'])}, batch fill "
               f"{stats['mean_batch_fill'] * 100:.0f}%, sustained "
               f"{stats['graphs_per_s']:.0f} graphs/s, "
+              f"{stats['partitioned_served']} oversize via partitioned "
+              f"mesh, "
               f"{stats['fallback_served']} oversize via padded fallback, "
               f"{stats['rejected_queue_full']} rejected by backpressure, "
               f"{stats['rejected_invalid']} invalid, "
@@ -418,6 +531,7 @@ def gnn_main(args):
           f"{stats['n_batches']} packed batches{shards_txt} "
           f"({stats['graphs_per_s']:.0f} graphs/s, node-slot utilization "
           f"{stats['node_slot_utilization'] * 100:.0f}%, "
+          f"{stats['partitioned_served']} oversize via partitioned mesh, "
           f"{stats['fallback_served']} oversize via padded fallback, "
           f"{stats['rejected_oversize']} rejected oversize, "
           f"{stats['rejected_invalid']} rejected invalid){err_txt}")
@@ -436,6 +550,12 @@ def main():
     ap.add_argument("--conv", default="gcn",
                     choices=["gcn", "sage", "gin", "pna"])
     ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--oversize-requests", type=int, default=0,
+                    help="append N giant graphs (~2x the node budget) to "
+                         "the --gnn queue to exercise the oversize "
+                         "lifecycle: partitioned SPMD program on a >= "
+                         "2-device mesh, padded per-graph oracle "
+                         "otherwise (docs/SERVING.md)")
     ap.add_argument("--batch-graphs", type=int, default=32)
     ap.add_argument("--agg-backend", default="xla",
                     choices=["xla", "pallas"],

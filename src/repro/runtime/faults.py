@@ -136,12 +136,20 @@ class FaultyExecutor:
     def can_fallback(self) -> bool:
         return getattr(self.inner, "can_fallback", False)
 
+    @property
+    def can_partition(self) -> bool:
+        return getattr(self.inner, "can_partition", False)
+
     def run_batch(self, batch: dict):
         return self._run(lambda: self.inner.run_batch(batch),
                          n_rows=int(batch["num_graphs"]))
 
     def run_fallback(self, graph):
         return self._run(lambda: self.inner.run_fallback(graph), n_rows=1)
+
+    def run_partitioned(self, graph):
+        return self._run(lambda: self.inner.run_partitioned(graph),
+                         n_rows=1)
 
     def _run(self, call, n_rows: int):
         idx = self.calls

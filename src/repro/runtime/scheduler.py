@@ -29,9 +29,11 @@ Design rules:
 * **Explicit rejection.** Pending queues are bounded
   (``max_queue_depth`` per tenant); an admission that would exceed the
   bound is rejected immediately (``rejected_queue_full``) instead of
-  buffered without bound. Oversize requests ride the padded fallback
-  path when the executor provides one, else they are rejected
-  (``rejected_oversize``); malformed inputs are rejected at admission
+  buffered without bound. Oversize requests ride the partitioned SPMD
+  program when a lane has a >= 2-device mesh behind it
+  (``run_partitioned`` -> ``served_partitioned``), the padded per-graph
+  fallback when only that exists (``served_fallback``), else they are
+  rejected (``rejected_oversize``); malformed inputs are rejected at admission
   (``rejected_invalid``, via ``data.pipeline.validate_graph`` when
   ``SchedulerConfig.validate`` is set) — never silently dropped.
 * **Fault tolerance.** An executor exception, hung launch, or
@@ -68,6 +70,7 @@ from repro.runtime.straggler import StragglerDetector
 
 # response statuses — every submitted request ends in exactly one of these
 SERVED_PACKED = "served_packed"
+SERVED_PARTITIONED = "served_partitioned"
 SERVED_FALLBACK = "served_fallback"
 REJECTED_QUEUE = "rejected_queue_full"
 REJECTED_OVERSIZE = "rejected_oversize"
@@ -98,6 +101,14 @@ class ExecutorCrash(RuntimeError):
     def __init__(self, msg: str = "executor crashed", after_s: float = 0.0):
         super().__init__(msg)
         self.after_s = float(after_s)
+
+
+class PartitionInfeasible(ValueError):
+    """``run_partitioned`` cannot split this graph under the per-device
+    budgets (e.g. one partition's owned+halo rows exceed the node
+    budget). The scheduler catches it and reroutes the request to the
+    padded fallback on the same launch — it is a routing signal, not a
+    lane fault."""
 
 
 # ------------------------------------------------------------------ clock --
@@ -163,6 +174,7 @@ def summarize(responses, *, fills=(), max_graphs: int = 0,
     return {
         "served": len(served),
         "packed_served": by_status.get(SERVED_PACKED, 0),
+        "partitioned_served": by_status.get(SERVED_PARTITIONED, 0),
         "fallback_served": by_status.get(SERVED_FALLBACK, 0),
         "rejected_queue_full": by_status.get(REJECTED_QUEUE, 0),
         "rejected_oversize": by_status.get(REJECTED_OVERSIZE, 0),
@@ -233,7 +245,8 @@ class Response:
 
     @property
     def served(self) -> bool:
-        return self.status in (SERVED_PACKED, SERVED_FALLBACK)
+        return self.status in (SERVED_PACKED, SERVED_PARTITIONED,
+                               SERVED_FALLBACK)
 
     @property
     def latency_s(self) -> float:
@@ -265,15 +278,23 @@ class SimExecutor:
     latency simulations such as the DSE objective)."""
 
     def __init__(self, service_model, batch_fn=None, fallback_fn=None,
-                 allow_fallback: bool = True):
+                 allow_fallback: bool = True, partition_fn=None,
+                 allow_partition: bool = False, num_partitions: int = 1):
         self.service_model = service_model
         self.batch_fn = batch_fn
         self.fallback_fn = fallback_fn
         self.allow_fallback = allow_fallback
+        self.partition_fn = partition_fn
+        self.allow_partition = allow_partition
+        self.num_partitions = max(int(num_partitions), 1)
 
     @property
     def can_fallback(self) -> bool:
         return self.allow_fallback
+
+    @property
+    def can_partition(self) -> bool:
+        return self.allow_partition or self.partition_fn is not None
 
     def run_batch(self, batch: dict):
         out = self.batch_fn(batch) if self.batch_fn is not None else None
@@ -289,6 +310,19 @@ class SimExecutor:
         svc = self.service_model(1, graph.num_nodes, graph.num_edges)
         return out, float(svc)
 
+    def run_partitioned(self, graph: P.Graph):
+        """Partitioned oversize launch: the per-device subgraphs run
+        concurrently, so the modeled service time is the service model
+        over one partition's share of the graph. ``partition_fn`` (when
+        set) supplies real outputs and may raise ``PartitionInfeasible``
+        to reroute the request to the padded fallback."""
+        out = self.partition_fn(graph) if self.partition_fn is not None \
+            else None
+        p = self.num_partitions
+        svc = self.service_model(1, -(-graph.num_nodes // p),
+                                 -(-graph.num_edges // p))
+        return out, float(svc)
+
 
 class MeasuredExecutor:
     """Real-execution executor: ``batch_fn``/``fallback_fn`` must block
@@ -299,13 +333,18 @@ class MeasuredExecutor:
     by the scheduler as a launch crash (retry -> dead-letter), never a
     serving-loop crash."""
 
-    def __init__(self, batch_fn, fallback_fn=None):
+    def __init__(self, batch_fn, fallback_fn=None, partition_fn=None):
         self.batch_fn = batch_fn
         self.fallback_fn = fallback_fn
+        self.partition_fn = partition_fn
 
     @property
     def can_fallback(self) -> bool:
         return self.fallback_fn is not None
+
+    @property
+    def can_partition(self) -> bool:
+        return self.partition_fn is not None
 
     def run_batch(self, batch: dict):
         t0 = time.perf_counter()
@@ -315,6 +354,15 @@ class MeasuredExecutor:
     def run_fallback(self, graph: P.Graph):
         t0 = time.perf_counter()
         out = self.fallback_fn(graph)
+        return out, time.perf_counter() - t0
+
+    def run_partitioned(self, graph: P.Graph):
+        """``partition_fn`` must block until the SPMD partitioned program
+        has answered; it may raise ``PartitionInfeasible`` when the graph
+        cannot split under the per-device budgets (the scheduler then
+        reroutes to ``run_fallback`` on the same launch)."""
+        t0 = time.perf_counter()
+        out = self.partition_fn(graph)
         return out, time.perf_counter() - t0
 
 
@@ -385,7 +433,7 @@ class LaneHealth:
 
 @dataclasses.dataclass(eq=False)
 class _Inflight:
-    kind: str                 # "packed" | "fallback"
+    kind: str                 # "packed" | "partitioned" | "fallback"
     requests: list
     outputs: object
     launch_s: float
@@ -455,7 +503,7 @@ class ContinuousScheduler:
                 return rid
         fits = P.graph_fits_budget(graph, self.cfg.node_budget,
                                    self.cfg.edge_budget)
-        if not fits and not self._can_fallback():
+        if not fits and not (self._can_partition() or self._can_fallback()):
             self.responses.append(Response(rid, tenant, REJECTED_OVERSIZE,
                                            now))
             return rid
@@ -557,8 +605,9 @@ class ContinuousScheduler:
         for i, lane in enumerate(self.lanes):
             if i in self.inflight:
                 continue
-            if sel.fallback is not None and not getattr(
-                    self.executors[i], "can_fallback", False):
+            if sel.fallback is not None and not (
+                    getattr(self.executors[i], "can_partition", False)
+                    or getattr(self.executors[i], "can_fallback", False)):
                 continue
             if lane.state in (LANE_HEALTHY, LANE_DEGRADED):
                 cands.append((0, i))
@@ -586,6 +635,18 @@ class ContinuousScheduler:
         # quarantine is temporary, so a quarantined fallback lane still
         # counts at admission — its work waits for the probe-back
         return any(getattr(e, "can_fallback", False)
+                   for e in self.executors)
+
+    def _can_partition(self) -> bool:
+        """Mesh-aware oversize classification: an executor backed by a
+        >= 2-device mesh advertises ``can_partition`` and answers
+        oversize requests through the partitioned SPMD program
+        (``served_partitioned``); the padded oracle stays as the no-mesh
+        fallback (``served_fallback``). Admission and launch consult
+        the same predicate, so an oversize request is classified exactly
+        once — it can never end up double-counted across
+        ``partitioned_served``/``fallback_served``/``rejected_oversize``."""
+        return any(getattr(e, "can_partition", False)
                    for e in self.executors)
 
     def _oversize(self, g: P.Graph) -> bool:
@@ -670,10 +731,25 @@ class ContinuousScheduler:
                                 "executor": exec_id, "seq": self._seq})
         error, after_s = None, 0.0
         if sel.fallback is not None:
+            # oversize launch: the partitioned SPMD program when the lane
+            # has a mesh behind it, else the padded per-graph oracle. A
+            # PartitionInfeasible reroutes to the oracle on the *same*
+            # launch, so the request resolves to exactly one of
+            # served_partitioned / served_fallback — never both.
             kind, reqs = "fallback", [sel.fallback]
             self._remove_pending(sel.fallback)
             try:
-                out, svc = executor.run_fallback(sel.fallback.graph)
+                if getattr(executor, "can_partition", False):
+                    try:
+                        out, svc = executor.run_partitioned(
+                            sel.fallback.graph)
+                        kind = "partitioned"
+                    except PartitionInfeasible:
+                        if not getattr(executor, "can_fallback", False):
+                            raise
+                        out, svc = executor.run_fallback(sel.fallback.graph)
+                else:
+                    out, svc = executor.run_fallback(sel.fallback.graph)
             except Exception as e:     # noqa: BLE001 — lane fault, not ours
                 out, svc = None, 0.0
                 error, after_s = FAIL_CRASH, getattr(e, "after_s", 0.0)
@@ -728,7 +804,9 @@ class ContinuousScheduler:
                 self._fail_launch(ex, u, error, t)
                 continue
             self.launches[u.seq]["status"] = "ok"
-            status = SERVED_PACKED if u.kind == "packed" else SERVED_FALLBACK
+            status = {"packed": SERVED_PACKED,
+                      "partitioned": SERVED_PARTITIONED}.get(
+                          u.kind, SERVED_FALLBACK)
             for k, r in enumerate(u.requests):
                 out = None
                 if u.outputs is not None:
@@ -951,13 +1029,21 @@ def simulate_wave_drain(trace, cfg: SchedulerConfig, executor):
             t = done
             seq += 1
         for r in over:
-            if getattr(executor, "can_fallback", False):
+            status = None
+            if getattr(executor, "can_partition", False):
+                try:
+                    out, svc = executor.run_partitioned(r.graph)
+                    status = SERVED_PARTITIONED
+                except PartitionInfeasible:
+                    status = None
+            if status is None and getattr(executor, "can_fallback", False):
                 out, svc = executor.run_fallback(r.graph)
+                status = SERVED_FALLBACK
+            if status is not None:
                 done = t + svc
                 row = None if out is None else np.asarray(out)
-                responses.append(Response(r.req_id, r.tenant,
-                                          SERVED_FALLBACK, r.arrival_s, t,
-                                          done, row, seq))
+                responses.append(Response(r.req_id, r.tenant, status,
+                                          r.arrival_s, t, done, row, seq))
                 t = done
                 seq += 1
             else:

@@ -1,0 +1,395 @@
+"""Giant-graph partitioned inference: partition_graph coverage and
+budget invariants, degenerate shapes (single part, no edges, more parts
+than nodes, disconnected components, everything cut), partitioned-vs-
+padded-oracle parity over the conv x precision x backend grid on
+simulated host devices, oversize routing (every oversize request
+resolves to exactly one of partitioned / fallback / rejected), and the
+DSE ``partition`` axis plumbing."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import convs as Cv
+from repro.core import dse
+from repro.core import perf_model as PM
+from repro.core.quantization import BYTE_WIDTHS
+from repro.data import pipeline as P
+from repro.runtime import scheduler as S
+
+DS = P.GraphDataConfig(avg_nodes=24, avg_degree=2, node_feat_dim=7,
+                       edge_feat_dim=3, max_nodes=64, max_edges=96,
+                       seed=11)
+GID_SENTINEL = 2 ** 30
+
+
+def _graph(n, edges, max_nodes=64, max_edges=96, f=7, fe=3):
+    """Padded Graph with an explicit edge list (structure-exact tests)."""
+    rng = np.random.default_rng(3)
+    nf = np.zeros((max_nodes, f), np.float32)
+    nf[:n] = rng.normal(size=(n, f)).astype(np.float32)
+    ei = np.full((max_edges, 2), -1, np.int32)
+    ef = np.zeros((max_edges, fe), np.float32)
+    for i, (s, d) in enumerate(edges):
+        ei[i] = (s, d)
+        ef[i] = rng.normal(size=(fe,)).astype(np.float32)
+    return P.Graph(node_feat=nf, edge_index=ei, edge_feat=ef,
+                   num_nodes=n, num_edges=len(edges),
+                   y=np.zeros((1,), np.float32))
+
+
+def _owned_gids(batch):
+    gid = np.asarray(batch["node_global_id"])
+    return gid[gid < GID_SENTINEL]
+
+
+# ------------------------------------------------ partition invariants --
+def test_partition_covers_every_node_and_edge_exactly_once():
+    g = P.make_graph(DS, 0)
+    part = P.partition_graph(g, 3, 48, 96)
+    assert part.total_nodes == g.num_nodes
+    assert part.total_edges == g.num_edges
+    assert part.padded_nodes == g.node_feat.shape[0]
+    # node ownership is a partition: every global id exactly once
+    owned = np.concatenate([_owned_gids(b) for b in part.parts])
+    assert sorted(owned.tolist()) == list(range(g.num_nodes))
+    # edge ownership is a partition: per-part valid edges sum to e
+    per_part_e = [int((np.asarray(b["edge_index"])[:, 0] >= 0).sum())
+                  for b in part.parts]
+    assert sum(per_part_e) == g.num_edges
+    src = g.edge_index[:g.num_edges, 0]
+    dst = g.edge_index[:g.num_edges, 1]
+    owner = np.empty((g.num_nodes,), np.int64)
+    for p, b in enumerate(part.parts):
+        owner[_owned_gids(b)] = p
+    assert part.cut_edges == int((owner[src] != owner[dst]).sum())
+    indeg = np.bincount(dst, minlength=g.num_nodes)
+    for p, b in enumerate(part.parts):
+        own = _owned_gids(b)
+        n_own = len(own)
+        active = int(b["graph_num_nodes"][0])
+        # packed layout: owned rows first, features copied verbatim
+        np.testing.assert_array_equal(b["node_feat"][:n_own],
+                                      g.node_feat[own])
+        # owned rows carry true *global* in-degrees (exact GCN norm)
+        np.testing.assert_array_equal(b["node_in_deg"][:n_own],
+                                      indeg[own].astype(np.float32))
+        # every owned edge's dst is an owned local row; halo rows only
+        # ever appear as sources
+        ei = np.asarray(b["edge_index"])
+        valid = ei[:, 0] >= 0
+        assert ei[valid, 1].max(initial=-1) < n_own
+        assert ei[valid, 0].max(initial=-1) < active
+        # halo exchange indices: sends publish owned rows, receives
+        # overwrite halo rows (never owned ones)
+        hs = np.asarray(b["halo_send"])
+        assert np.all(hs[hs >= 0] < n_own)
+        hd = np.asarray(b["halo_recv_dst"])
+        live = hd < part.node_budget
+        assert np.all(hd[live] >= n_own) and np.all(hd[live] < active)
+        assert int(b["total_nodes"]) == g.num_nodes
+
+
+def test_partition_budget_violations_raise():
+    chain = _graph(8, [(i, i + 1) for i in range(7)])
+    with pytest.raises(ValueError, match="node_budget"):
+        P.partition_graph(chain, 2, 4, 96)       # 4 owned + halo > 4
+    with pytest.raises(ValueError, match="edge_budget"):
+        P.partition_graph(chain, 2, 64, 1)
+    with pytest.raises(ValueError, match="halo_budget"):
+        P.partition_graph(chain, 2, 64, 96, halo_budget=0)
+    with pytest.raises(ValueError, match="num_parts"):
+        P.partition_graph(chain, 0, 64, 96)
+
+
+def test_partition_single_part_is_halo_free():
+    g = P.make_graph(DS, 1)
+    part = P.partition_graph(g, 1, 64, 96)
+    assert part.num_parts == 1 and len(part.parts) == 1
+    assert part.cut_edges == 0 and part.halo_nodes == 0
+    assert len(_owned_gids(part.parts[0])) == g.num_nodes
+    assert np.all(np.asarray(part.parts[0]["halo_send"]) == -1)
+
+
+def test_partition_edgeless_graph():
+    g = _graph(6, [])
+    part = P.partition_graph(g, 2, 8, 8)
+    assert part.cut_edges == 0 and part.halo_nodes == 0
+    assert sorted(len(_owned_gids(b)) for b in part.parts) == [3, 3]
+
+
+def test_partition_more_parts_than_nodes_keeps_shapes():
+    g = _graph(2, [(0, 1)])
+    part = P.partition_graph(g, 4, 8, 8)
+    counts = sorted(len(_owned_gids(b)) for b in part.parts)
+    assert counts == [0, 0, 1, 1]
+    for b in part.parts:
+        assert b["node_feat"].shape == part.parts[0]["node_feat"].shape
+        assert int(b["num_graphs"]) == 1
+
+
+def test_partition_disconnected_components_cut_free():
+    """BFS-ordered greedy keeps whole components together: two equal
+    chains over two parts cut zero edges and exchange nothing."""
+    edges = [(i, i + 1) for i in range(3)] + [(1, 0)] \
+        + [(4 + i, 5 + i) for i in range(3)] + [(5, 4)]
+    g = _graph(8, edges)
+    part = P.partition_graph(g, 2, 8, 8)
+    assert part.cut_edges == 0 and part.halo_nodes == 0
+    comps = [sorted(_owned_gids(b).tolist()) for b in part.parts]
+    assert sorted(comps) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+
+
+def test_partition_every_edge_cut():
+    """One node per part: both directions of the only pair cross the
+    cut and each part replicates the other's node as halo."""
+    g = _graph(2, [(0, 1), (1, 0)])
+    part = P.partition_graph(g, 2, 8, 8)
+    assert part.cut_edges == 2 == g.num_edges
+    assert part.halo_nodes == 2
+    for b in part.parts:
+        assert int(b["graph_num_nodes"][0]) == 2   # 1 owned + 1 halo
+
+
+def test_comm_bytes_matches_dse_model():
+    g = P.make_graph(DS, 2)
+    part = P.partition_graph(g, 2, 48, 96)
+    assert part.comm_bytes(16, 4.0, 3) == Cv.halo_comm_bytes(
+        part.cut_edges, 16, 4.0, 3)
+    assert part.comm_bytes(16, 4.0, 3) \
+        == part.cut_edges * 16 * 4.0 * 2
+    # a single conv layer has no layer boundary: nothing to exchange
+    assert part.comm_bytes(16, 4.0, 1) == 0.0
+    assert Cv.halo_comm_bytes(100, 16, 4.0, 0) == 0.0
+
+
+# ------------------------------------------------ oversize routing ------
+def _sized(idx, n_nodes, n_edges=4):
+    g = P.make_graph(DS, idx)
+    return dataclasses.replace(g, num_nodes=n_nodes, num_edges=n_edges)
+
+
+def _sched(lane, node_budget=20):
+    cfg = S.SchedulerConfig(node_budget, 10_000, 4,
+                            default_tier=S.SLOTier("standard", 0.25, 1))
+    return S.ContinuousScheduler(cfg, [lane])
+
+
+def test_oversize_served_partitioned_on_mesh_capable_lane():
+    lane = S.SimExecutor(S.constant_service(1.0), allow_partition=True,
+                         num_partitions=2)
+    sched = _sched(lane)
+    sched.submit(_sized(0, 40))
+    sched.drain()
+    assert sched.responses[0].status == S.SERVED_PARTITIONED
+    s = sched.summary()
+    assert s["partitioned_served"] == 1
+    assert s["fallback_served"] == 0 and s["rejected_oversize"] == 0
+
+
+def test_partition_infeasible_reroutes_to_fallback_same_launch():
+    def infeasible(_g):
+        raise S.PartitionInfeasible("does not fit per-device budgets")
+    lane = S.SimExecutor(S.constant_service(1.0), partition_fn=infeasible)
+    sched = _sched(lane)
+    sched.submit(_sized(0, 40))
+    sched.drain()
+    assert sched.responses[0].status == S.SERVED_FALLBACK
+    assert len(sched.launches) == 1          # reroute, not a second launch
+    s = sched.summary()
+    assert s["partitioned_served"] == 0 and s["fallback_served"] == 1
+
+
+def test_oversize_exactly_one_terminal_status():
+    """Mixed feasible/infeasible oversize traffic: every request lands
+    in exactly one of partitioned_served / fallback_served /
+    rejected_oversize — the double-count bug this PR's admission/launch
+    agreement fix closes."""
+    def part_fn(g):
+        if g.num_nodes % 2:
+            raise S.PartitionInfeasible("odd-size graphs refuse to split")
+        return None
+    lane = S.SimExecutor(S.constant_service(1.0), partition_fn=part_fn,
+                         num_partitions=2)
+    sched = _sched(lane)
+    for i, nn in enumerate([40, 41, 44, 45, 8]):
+        sched.submit(_sized(i, nn))
+    sched.drain()
+    assert sorted(r.req_id for r in sched.responses) == list(range(5))
+    s = sched.summary()
+    assert s["partitioned_served"] == 2
+    assert s["fallback_served"] == 2
+    assert s["rejected_oversize"] == 0
+    assert s["served"] == 5
+
+
+def test_wave_drain_matches_continuous_oversize_accounting():
+    """simulate_wave_drain (the serve.py wave oracle) classifies
+    oversize through the same can_partition predicate."""
+    def part_fn(g):
+        if g.num_nodes > 50:
+            raise S.PartitionInfeasible("beyond the partitioned lane")
+        return None
+    cfg = S.SchedulerConfig(20, 10_000, 2,
+                            default_tier=S.SLOTier("standard", 0.25, 1))
+    lane = S.SimExecutor(S.constant_service(1.0), partition_fn=part_fn,
+                         allow_fallback=False, num_partitions=2)
+    trace = [(0.1 * i, _sized(i, nn), "default")
+             for i, nn in enumerate([8, 40, 60, 8, 44])]
+    _, summary = S.simulate_wave_drain(trace, cfg, lane)
+    assert summary["partitioned_served"] == 2
+    assert summary["fallback_served"] == 0
+    assert summary["rejected_oversize"] == 1     # 60 nodes, no fallback
+    assert summary["served"] == 4
+
+
+# ------------------------------------------------ DSE / feature axis ----
+def test_space_has_partition_and_features_roundtrip():
+    rng = np.random.default_rng(0)
+    assert 1 in dse.SPACE["partition"]
+    d = dse.sample_design(rng)
+    assert d["partition"] in dse.SPACE["partition"]
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    assert v[PM.FEATURE_NAMES.index("partition")] == float(d["partition"])
+    halo = v[PM.FEATURE_NAMES.index("halo_comm_bytes")]
+    if d["partition"] == 1:
+        assert halo == 0.0
+    else:
+        p = d["partition"]
+        cut = (p - 1) / p * d.get("edge_budget", d["avg_edges"])
+        assert halo == pytest.approx(Cv.halo_comm_bytes(
+            cut, d["gnn_hidden_dim"],
+            BYTE_WIDTHS[d.get("precision", "fp32")],
+            d["gnn_layers"]))
+
+
+def test_legacy_design_featurizes_as_unpartitioned():
+    """Databases recorded before the partition axis still featurize:
+    partition defaults to 1 with zero modeled exchange volume."""
+    rng = np.random.default_rng(1)
+    d = dse.sample_design(rng)
+    d.pop("partition", None)
+    v = PM.features(d)
+    assert len(v) == len(PM.FEATURE_NAMES)
+    assert v[PM.FEATURE_NAMES.index("partition")] == 1.0
+    assert v[PM.FEATURE_NAMES.index("halo_comm_bytes")] == 0.0
+
+
+# --------------------------------- parity (simulated host devices) ------
+# The device count must be pinned before jax initializes, so the grid
+# runs in one subprocess over 4 simulated host devices: every conv,
+# every precision, both aggregation backends, partitioned-vs-padded-
+# oracle. fp32 gcn is asserted *bitwise* (the serve-path acceptance
+# contract); everything else to a tight tolerance — pna fp32 reduces its
+# degree statistics in a different association order across devices
+# (~2e-6 at these widths), which bitwise would spuriously fail.
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import gnn_model as G
+    from repro.data import pipeline as P
+    from repro.launch.mesh import make_data_mesh
+    from repro.nn import param as prm
+    from repro.core import aggregations as agg_mod
+
+    DS = P.GraphDataConfig(avg_nodes=40, avg_degree=2, node_feat_dim=7,
+                           edge_feat_dim=3, max_nodes=128, max_edges=192,
+                           seed=11)
+    g = P.make_graph(DS, 0)
+    part4 = P.partition_graph(g, 4, 64, 128)
+    stacked4 = G.stack_shards(part4.parts)
+    mesh4 = make_data_mesh(4)
+    el = {"node_feat": jnp.asarray(g.node_feat),
+          "edge_index": jnp.asarray(g.edge_index),
+          "edge_feat": jnp.asarray(g.edge_feat),
+          "num_nodes": jnp.int32(g.num_nodes)}
+
+    for conv in ("gcn", "sage", "gin", "pna"):
+        cfg = G.GNNModelConfig(
+            graph_input_feature_dim=7, graph_input_edge_dim=3,
+            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
+            gnn_conv=conv,
+            mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
+                                 hidden_layers=1))
+        params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+        oracle = jax.jit(lambda p, e, c=cfg: G.apply(p, c, e))
+        ref32 = np.asarray(oracle(params, el))
+        cal_batch, _ = P.pack_graphs([g], 192, 384, 4)
+        for precision in ("fp32", "bf16", "int8"):
+            policy = G.calibrated_policy(
+                params, cfg, G.packed_to_device(cal_batch), precision)
+            for backend in ("xla", "pallas"):
+                with agg_mod.backend_scope(backend, 32, 32):
+                    fn = G.make_partitioned_apply(
+                        cfg, mesh4, None, policy,
+                        out_rows=part4.padded_nodes)
+                    out = np.asarray(fn(params, stacked4))
+                    single = jax.jit(lambda p, b, c=cfg, po=policy:
+                                     G.apply_packed(p, c, b, None, po))
+                    ref = np.asarray(single(
+                        params, G.packed_to_device(cal_batch)))[0]
+                    err = np.abs(out - ref).max()
+                    assert err < 1e-4, (conv, precision, backend, err)
+                    if precision == "fp32" and conv == "gcn":
+                        # bitwise vs the padded oracle built under the
+                        # SAME backend (the serve-path contract)
+                        refb = np.asarray(jax.jit(
+                            lambda p, e: G.apply(p, cfg, e))(params, el))
+                        assert np.array_equal(out, refb), \\
+                            (backend, np.abs(out - refb).max())
+        # degenerate: 1-part partition over a 1-device mesh is the
+        # padded program with an inert exchange — bitwise at fp32
+        part1 = P.partition_graph(g, 1, 128, 192)
+        out1 = np.asarray(G.apply_packed_partitioned(
+            params, cfg, part1, mesh=make_data_mesh(1)))
+        assert np.array_equal(out1, ref32), conv
+
+    # degenerate: disconnected components split cut-free -> the SPMD
+    # exchange runs with an all-padding halo and must be inert (gcn fp32)
+    nf = np.zeros((128, 7), np.float32)
+    nf[:8] = np.random.default_rng(1).normal(size=(8, 7)).astype(
+        np.float32)
+    ei = np.full((192, 2), -1, np.int32)
+    edges = [(i, i + 1) for i in range(3)] \\
+        + [(4 + i, 5 + i) for i in range(3)]
+    for i, (s, d) in enumerate(edges):
+        ei[i] = (s, d)
+    gd = P.Graph(node_feat=nf, edge_index=ei,
+                 edge_feat=np.zeros((192, 3), np.float32),
+                 num_nodes=8, num_edges=len(edges),
+                 y=np.zeros((1,), np.float32))
+    cfg = G.GNNModelConfig(
+        graph_input_feature_dim=7, graph_input_edge_dim=3,
+        gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
+        gnn_conv="gcn",
+        mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
+                             hidden_layers=1))
+    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
+    pd = P.partition_graph(gd, 2, 16, 16)
+    assert pd.cut_edges == 0 and pd.halo_nodes == 0
+    out = np.asarray(G.apply_packed_partitioned(
+        params, cfg, pd, mesh=make_data_mesh(2)))
+    eld = {"node_feat": jnp.asarray(gd.node_feat),
+           "edge_index": jnp.asarray(gd.edge_index),
+           "edge_feat": jnp.asarray(gd.edge_feat),
+           "num_nodes": jnp.int32(gd.num_nodes)}
+    ref = np.asarray(jax.jit(lambda p, e: G.apply(p, cfg, e))(params, eld))
+    assert np.array_equal(out, ref)
+    print("PARTITIONED_PARITY_OK")
+""")
+
+
+def test_partitioned_parity_grid_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "PARTITIONED_PARITY_OK" in out.stdout, out.stderr[-3000:]
