@@ -5,7 +5,10 @@ that under executor crashes, hangs, NaN-corrupted outputs, and
 transient slowdowns the scheduler loses nothing and degrades
 gracefully. This benchmark proves it on the virtual clock: a seeded
 open-loop Poisson trace is served twice through a 4-lane executor pool
-— once fault-free (the baseline) and once with every lane wrapped in a
+(lane 0 runs a real jitted GAT packed program, so the non-finite
+output screen is exercised by genuine attention numerics, not just
+zero stubs) — once fault-free (the baseline) and once with every lane
+wrapped in a
 seed-driven ``runtime.faults.FaultyExecutor`` injecting faults at
 >= 10% of launches, plus a scripted double-crash on lane 0 so a
 quarantine-and-probe-back cycle happens deterministically, plus
@@ -44,9 +47,12 @@ import dataclasses
 import json
 import os
 
+import jax
 import numpy as np
 
+from repro.core import gnn_model as G
 from repro.data import pipeline as P
+from repro.nn import param as prm
 from repro.runtime import scheduler as S
 from repro.runtime.faults import FaultPlan, FaultSpec, FaultyExecutor
 
@@ -88,6 +94,44 @@ def _sim_lane():
         fallback_fn=lambda g: np.zeros((1,), np.float32))
 
 
+_GAT_FN = None
+
+
+def _gat_program():
+    """Jitted GAT packed program for lane 0: the fault-free baseline
+    pushes real attention outputs (segment-softmax and all) through the
+    scheduler's non-finite output screen, proving the guard passes
+    finite GAT rows; under chaos the corrupt fault poisons the same
+    rows and the screen must catch them."""
+    global _GAT_FN
+    if _GAT_FN is None:
+        cfg = G.GNNModelConfig(
+            graph_input_feature_dim=DS.node_feat_dim,
+            graph_input_edge_dim=DS.edge_feat_dim,
+            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
+            gnn_conv="gat", avg_degree=float(DS.avg_degree),
+            mlp_head=G.MLPConfig(in_dim=8 * 3, out_dim=1, hidden_dim=8,
+                                 hidden_layers=1))
+        params = prm.materialize(G.model_plan(cfg), jax.random.key(7))
+        _GAT_FN = jax.jit(lambda b: G.apply_packed(params, cfg, b))
+    return _GAT_FN
+
+
+def _gat_lane():
+    """Lane 0: real GAT inference instead of zeros, same service model
+    (virtual time stays identical), so every baseline launch on this
+    lane exercises the output guard with genuine model numerics."""
+    fn = _gat_program()
+    return S.SimExecutor(
+        S.constant_service(SERVICE_S),
+        batch_fn=lambda b: np.asarray(fn(b), np.float32),
+        fallback_fn=lambda g: np.zeros((1,), np.float32))
+
+
+def _lane(i: int):
+    return _gat_lane() if i == 0 else _sim_lane()
+
+
 def _poison(g: P.Graph) -> P.Graph:
     """A malformed request: NaN node features in the active prefix —
     exactly what ``validate_graph`` must reject at admission."""
@@ -108,7 +152,7 @@ def run_point(n: int, load: float, fault_scale: float, seed: int) -> dict:
     trace = make_trace(n, load, seed)
     cfg = scheduler_config()
 
-    base = S.ContinuousScheduler(cfg, [_sim_lane() for _ in range(N_LANES)])
+    base = S.ContinuousScheduler(cfg, [_lane(i) for i in range(N_LANES)])
     S.run_trace(base, trace)
     bs = base.summary()
 
@@ -125,7 +169,7 @@ def run_point(n: int, load: float, fault_scale: float, seed: int) -> dict:
             plan.specs[:0] = [FaultSpec("crash", launch=2),
                               FaultSpec("crash", launch=3)]
             plan._fired[:0] = [False, False]
-        lanes.append(FaultyExecutor(_sim_lane(), plan, clock))
+        lanes.append(FaultyExecutor(_lane(i), plan, clock))
     chaos = S.ContinuousScheduler(cfg, lanes, clock=clock)
     S.run_trace(chaos, trace)
     cs = chaos.summary()

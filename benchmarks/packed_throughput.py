@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.gnn import DATASETS, benchmark_config
+from repro.core import convs as Cv
 from repro.core import aggregations as agg_mod
 from repro.core import gnn_model as G
 from repro.data import pipeline as P
@@ -135,11 +136,13 @@ def run(conv: str = "gcn", dataset: str = "qm9", n_graphs: int = 64,
     return res
 
 
-def run_all(convs=("gcn", "sage", "gin", "pna"), dataset: str = "qm9",
+def run_all(convs=None, dataset: str = "qm9",
             n_graphs: int = 64, batch_graphs: int = 32, repeats: int = 3,
             fused: bool = True, log=print) -> dict:
     """Sweep every conv and record per-conv fused/unfused graphs/s —
     the perf-trajectory seed for the fused edge pipeline."""
+    if convs is None:
+        convs = Cv.CONV_TYPES          # registry-derived: gat included
     res = {"dataset": dataset, "n_graphs": n_graphs,
            "batch_graphs": batch_graphs,
            "jax_backend": jax.default_backend(), "convs": {}}
@@ -155,8 +158,8 @@ def run_all(convs=("gcn", "sage", "gin", "pna"), dataset: str = "qm9",
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--convs", nargs="+",
-                    default=["gcn", "sage", "gin", "pna"],
-                    choices=["gcn", "sage", "gin", "pna"])
+                    default=list(Cv.CONV_TYPES),
+                    choices=list(Cv.CONV_TYPES))
     ap.add_argument("--dataset", default="qm9")
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--batch-graphs", type=int, default=32)

@@ -34,6 +34,7 @@ import jax
 import numpy as np
 
 from repro.configs.gnn import DATASETS
+from repro.core import convs as Cv
 from repro.core import gnn_model as G
 from repro.core import quantization as Q
 from repro.data import pipeline as P
@@ -138,12 +139,14 @@ def run_point(conv: str, n_graphs: int, batch_graphs: int,
     return out
 
 
-def run(convs=("gcn", "sage", "gin", "pna"), n_graphs: int = 64,
+def run(convs=None, n_graphs: int = 64,
         batch_graphs: int = 32, repeats: int = 3, smoke: bool = False,
         build_root: str = "/tmp/gnnb_precision_bench",
         log=print) -> dict:
     if smoke:
         convs = ("gcn",)
+    elif convs is None:
+        convs = Cv.CONV_TYPES          # registry-derived: gat included
     res = {"dataset": "qm9", "n_graphs": n_graphs,
            "batch_graphs": batch_graphs,
            "jax_backend": jax.default_backend(),
@@ -181,8 +184,8 @@ if __name__ == "__main__":
                     help="gcn-only point + acceptance gates (parity per "
                          "precision, >= 1.5x modeled-bytes cut)")
     ap.add_argument("--convs", nargs="+",
-                    default=["gcn", "sage", "gin", "pna"],
-                    choices=["gcn", "sage", "gin", "pna"])
+                    default=list(Cv.CONV_TYPES),
+                    choices=list(Cv.CONV_TYPES))
     ap.add_argument("--n", type=int, default=64)
     ap.add_argument("--batch-graphs", type=int, default=32)
     ap.add_argument("--repeats", type=int, default=3)

@@ -289,6 +289,54 @@ def segment_aggregate(agg: str, messages, seg_ids, num_segments: int,
     return out[:num_segments]
 
 
+def segment_softmax(logits, seg_ids, num_segments: int, valid=None, *,
+                    backend: str | None = None,
+                    edge_block: int | None = None,
+                    interpret: bool | None = None):
+    """Per-edge softmax weights normalized within each destination
+    segment — the attention-conv reduction (GAT). logits: (E,) ->
+    (E,) float32; seg_ids: (E,) int32 with padding marked by -1, any id
+    >= num_segments, or ``valid == False``.
+
+    Numerically stable at any logit magnitude: both backends subtract
+    the per-segment max before exponentiating (the Pallas path is the
+    online-softmax machine of ``kernels/segment_softmax``; the XLA path
+    is segment_max + shifted exp + segment_sum), so +-1e4 logits never
+    overflow. A -inf logit on a valid edge is a masked attention slot:
+    it contributes 0 to the denominator and gets weight 0; an all-masked
+    or empty segment yields all-zero weights — never NaN/Inf.
+
+    Attention weights are *not* precision-polymorphic: the logit/softmax
+    math always runs fp32 regardless of the layer's PrecisionPolicy
+    (the documented int8 exclusion — only the projection and the
+    aggregate message stream quantize; docs/KERNELS.md)."""
+    backend = backend or _DEFAULT_BACKEND
+    if backend not in SEGMENT_BACKENDS:
+        raise ValueError(backend)
+    if backend == "pallas":
+        from repro.kernels.segment_softmax.ops import (
+            segment_softmax as _pallas_segment_softmax)
+        return _pallas_segment_softmax(
+            logits, seg_ids, valid, num_segments=num_segments,
+            edge_block=edge_block or _DEFAULT_EDGE_BLOCK,
+            interpret=_resolve_interpret(interpret))
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    ok = (seg_ids >= 0) & (seg_ids < num_segments)
+    if valid is not None:
+        ok = ok & valid
+    seg = jnp.where(ok, seg_ids, num_segments)
+    ns = num_segments + 1           # +1 bucket swallows padding
+    z = jnp.asarray(logits, jnp.float32)
+    m = jax.ops.segment_max(z, seg, ns)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    # mask before the exp: a padding logit can exceed its (overflow)
+    # bucket statistics and overflow to +inf on lanes where() discards
+    p = jnp.where(ok, jnp.exp(jnp.where(ok, z, -jnp.inf)
+                              - jnp.take(m_safe, seg)), 0.0)
+    denom = jax.ops.segment_sum(p, seg, ns)
+    return p / jnp.maximum(jnp.take(denom, seg), 1e-30)
+
+
 GATHER_AGGREGATIONS = ("sum", "mean", "min", "max")
 
 

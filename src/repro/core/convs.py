@@ -5,9 +5,20 @@ dataflow over padded COO graphs, which is what lets GNNBuilder support
 anisotropic layers (PNA) that SpMM accelerators cannot express.
 
 Kernels: GCN [23], GraphSAGE [24], GIN(E) [26], PNA [27] — the paper's
-Table II set. Each provides ``plan(cfg)`` + ``apply(params, g, x)``, where
-``g`` is a dict {edge_index (E,2), edge_feat (E,Fe), num_nodes, in_deg,
-out_deg, valid_e} with static max shapes (MAX_NODES/MAX_EDGES analogue).
+Table II set — plus GAT [25], the attention conv the GNN-acceleration
+survey names as the standard coverage axis (per-edge softmax is a new
+reduction shape: ``kernels/segment_softmax``). Each provides
+``plan(cfg)`` + ``apply(params, g, x)``, where ``g`` is a dict
+{edge_index (E,2), edge_feat (E,Fe), num_nodes, in_deg, out_deg,
+valid_e} with static max shapes (MAX_NODES/MAX_EDGES analogue).
+
+Convs are *registered*, not hard-wired: ``register_conv`` records each
+conv's (plan, apply) pair and capability flags in ``CONV_REGISTRY``
+(``ConvSpec``), and everything downstream — the dataflow planner, the
+residency rule, ``dse.SPACE["conv"]``, the perf-model conv one-hots,
+and the test parity grids — enumerates convs from the registry. The
+legacy ``CONV_TYPES`` / ``REORDERABLE_CONVS`` / ``RESIDENT_CONVS``
+tuples survive as registry-derived views.
 
 The same applies serve both execution formats: a single padded graph and
 a packed GraphBatch (many graphs in one flat buffer). A packed batch is
@@ -48,19 +59,99 @@ from repro.core.quantization import LayerPrecision
 from repro.nn.layers import act, linear, linear_plan
 from repro.nn.param import ParamSpec
 
-CONV_TYPES = ("gcn", "sage", "gin", "pna")
 PNA_AGGS = ("mean", "min", "max", "std")
 PNA_SCALERS = ("identity", "amplification", "attenuation")
 
 DATAFLOWS = ("auto", "aggregate_first", "transform_first")
-# convs whose phi is a plain linear map: aggregation commutes with the
-# transform, so the planner may reorder them. GIN's gamma-MLP runs after
-# the sum either way and PNA's phi is a per-edge MLP — no freedom there.
-REORDERABLE_CONVS = ("gcn", "sage")
-# convs the multi-layer VMEM-residency kernel can execute (linear phi +
-# a single scalar per edge); must stay in sync with
-# kernels.fused_gather_aggregate.residency.RESIDENT_KINDS
-RESIDENT_CONVS = ("gcn", "sage")
+
+PRECISION_GRID = ("fp32", "bf16", "int8")
+
+
+# ------------------------------------------------------- conv registry --
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One conv's capability contract — the single place the planner,
+    DSE, perf model, and the parity grids enumerate convs from
+    (docs/KERNELS.md, docs/DSE.md). Adding a conv is one
+    ``register_conv`` call next to its plan/apply pair; nothing else in
+    the stack hard-codes conv names."""
+    name: str
+    plan: object          # (ConvConfig, dtype) -> param plan
+    apply: object         # (params, g, x, ConvConfig) -> (N, F_out)
+    # phi is a plain linear map: aggregation commutes with the
+    # transform, so the dataflow planner may reorder the layer
+    reorderable: bool = False
+    # the multi-layer VMEM-residency kernel can execute it (linear phi +
+    # a single scalar per edge); must stay in sync with
+    # kernels.fused_gather_aggregate.residency.RESIDENT_KINDS
+    resident: bool = False
+    # carries a per-edge logit/softmax stage (segment_softmax): adds the
+    # attention term to dataflow_cost and excludes the logit math from
+    # int8 (the weights themselves stay fp32 at every policy)
+    attention: bool = False
+    # PrecisionPolicy grid the conv's datapath supports (the parity
+    # harness precision axis); attention convs still list int8 — only
+    # their projection/aggregate stream quantizes, never the softmax
+    precisions: tuple = PRECISION_GRID
+    # partitioned-vs-padded-oracle parity holds *bitwise* at fp32: the
+    # conv's per-segment reductions preserve the edge stream's relative
+    # order on every device (the serve-path acceptance contract)
+    partition_bitwise: bool = False
+    # enumerated in dse.SPACE["conv"] / perf-model conv one-hots
+    dse: bool = True
+
+
+CONV_REGISTRY: dict[str, ConvSpec] = {}
+_REGISTRY_LISTENERS: list = []
+
+# registry-derived capability tuples, rebuilt by every (un)register call
+# — read these as ``convs.CONV_TYPES`` (attribute access), not via
+# ``from ... import`` snapshots, so late registrations stay visible
+CONV_TYPES: tuple = ()
+REORDERABLE_CONVS: tuple = ()
+RESIDENT_CONVS: tuple = ()
+
+
+def _registry_changed():
+    global CONV_TYPES, REORDERABLE_CONVS, RESIDENT_CONVS
+    CONV_TYPES = tuple(CONV_REGISTRY)
+    REORDERABLE_CONVS = tuple(n for n, s in CONV_REGISTRY.items()
+                              if s.reorderable)
+    RESIDENT_CONVS = tuple(n for n, s in CONV_REGISTRY.items()
+                           if s.resident)
+    for fn in list(_REGISTRY_LISTENERS):
+        fn()
+
+
+def register_conv(name: str, plan, apply, **caps) -> ConvSpec:
+    """Register a conv's (plan, apply) pair plus capability flags
+    (``ConvSpec`` fields). Derived enumerations — ``CONV_TYPES``,
+    ``dse.SPACE["conv"]``, ``perf_model.FEATURE_NAMES`` conv one-hots,
+    the parity-grid axes — rebuild immediately."""
+    spec = ConvSpec(name=name, plan=plan, apply=apply, **caps)
+    CONV_REGISTRY[name] = spec
+    _registry_changed()
+    return spec
+
+
+def unregister_conv(name: str) -> None:
+    del CONV_REGISTRY[name]
+    _registry_changed()
+
+
+def conv_spec(name: str) -> ConvSpec:
+    try:
+        return CONV_REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown conv {name!r}; registered: "
+                         f"{CONV_TYPES}") from None
+
+
+def on_registry_change(fn) -> None:
+    """Subscribe to registry mutations (dse / perf_model derive their
+    conv axes through this). The callback takes no arguments and runs
+    synchronously inside every (un)register call."""
+    _REGISTRY_LISTENERS.append(fn)
 
 # word-equivalence factor between the two cost-model currencies: at the
 # TPUTarget roofline (819 GB/s HBM, 197 TFLOP/s) one fp32 word moved
@@ -116,7 +207,8 @@ def gather_compute_flops(num_nodes: int, num_edges: int, feat_dim: int,
 
 def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
                   msg_bytes: float = 4.0, gather_mode: str = "dma",
-                  num_nodes: int = 1024, node_block: int = 128) -> dict:
+                  num_nodes: int = 1024, node_block: int = 128,
+                  attention: bool = False) -> dict:
     """Per-node cost (fp32-word-equivalents moved through the edge
     pipeline + MACs/F) of each ordering. The W matmul costs
     ``in_dim * out_dim`` MACs per node either way; the edge stream
@@ -133,13 +225,25 @@ def dataflow_cost(in_dim: int, out_dim: int, avg_degree: float,
     the roofline ratio ``_MACS_PER_WORD``: negligible for "dma"
     (~0.003 words/element — the v2 kernel is bandwidth-bound), dominant
     for "onehot" (its dense contractions grow with ``num_nodes``), so
-    ordering decisions stay honest under either kernel generation."""
+    ordering decisions stay honest under either kernel generation.
+
+    ``attention`` adds the logit/softmax term of attention convs
+    (registry ``ConvSpec.attention``): per in-edge, one fp32 logit read
+    plus one fp32 weight write (the softmax weights never quantize, so
+    this term does *not* scale with ``msg_bytes``) and the online-softmax
+    arithmetic (~8 flops/edge: max, two exps, multiply-accumulate,
+    divide). Width-independent, so it shifts both orderings equally —
+    attention convs are not reorderable anyway (the softmax pins the
+    aggregation to the projected width) — but it keeps the roofline and
+    the DSE's modeled latency honest about what a gat layer streams."""
     matmul = in_dim * out_dim
     gflops = gather_compute_flops(num_nodes, avg_degree, 1.0,
                                   gather_mode, node_block)
     stream = avg_degree * (msg_bytes / 4.0) + gflops / 2.0 / _MACS_PER_WORD
-    return {"aggregate_first": stream * in_dim + matmul,
-            "transform_first": stream * out_dim + matmul}
+    attn = avg_degree * (2.0 + 8.0 / 2.0 / _MACS_PER_WORD) \
+        if attention else 0.0
+    return {"aggregate_first": stream * in_dim + matmul + attn,
+            "transform_first": stream * out_dim + matmul + attn}
 
 
 def halo_comm_bytes(cut_edges: float, feat_dim: int,
@@ -165,7 +269,8 @@ def resolve_dataflow(cfg: ConvConfig) -> str:
     if cfg.dataflow != "auto":
         return cfg.dataflow
     cost = dataflow_cost(cfg.in_dim, cfg.out_dim, cfg.avg_degree,
-                         cfg.precision.bytes_per_value)
+                         cfg.precision.bytes_per_value,
+                         attention=conv_spec(cfg.conv).attention)
     return "transform_first" \
         if cost["transform_first"] < cost["aggregate_first"] \
         else "aggregate_first"
@@ -390,15 +495,69 @@ def pna_apply(params, g, x, cfg: ConvConfig):
     return linear(params["post"], out.astype(x.dtype))
 
 
-PLANS = {"gcn": gcn_plan, "sage": sage_plan, "gin": gin_plan,
-         "pna": pna_plan}
-APPLIES = {"gcn": gcn_apply, "sage": sage_apply, "gin": gin_apply,
-           "pna": pna_apply}
+# ---------------------------------------------------------------- GAT ---
+def gat_plan(cfg: ConvConfig, dtype=jnp.float32):
+    p = {
+        "w": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                         out_axis="mlp", bias=True, dtype=dtype),
+        "w_self": linear_plan(cfg.in_dim, cfg.out_dim, in_axis="embed",
+                              out_axis="mlp", dtype=dtype),
+        "a_src": ParamSpec((cfg.out_dim,), dtype, ("mlp",)),
+        "a_dst": ParamSpec((cfg.out_dim,), dtype, ("mlp",)),
+    }
+    if cfg.edge_dim:
+        p["a_edge"] = linear_plan(cfg.edge_dim, 1, in_axis=None,
+                                  out_axis=None, dtype=dtype)
+    return p
+
+
+def gat_apply(params, g, x, cfg: ConvConfig):
+    """x' = W_self x_v + sum_u alpha_uv (W x_u) + b, with
+    alpha = softmax_v(LeakyReLU(a_src.(W x_u) + a_dst.(W x_v)
+    [+ a_e.e_uv])) — the root-weight GAT variant (no implicit self
+    loops; the explicit W_self path keeps isolated nodes informative).
+
+    The per-dst softmax is the new reduction shape: logits stream
+    through ``segment_softmax`` (per-segment online max/exp-sum — the
+    ``kernels/segment_softmax`` Pallas machine under backend="pallas"),
+    and the resulting per-edge weight rides the fused gather tier's
+    existing scale slot, exactly where the GCN symmetric norm sits — so
+    the (E, F) message tensor still never materializes on the Pallas
+    path. Attention math is fp32 at every PrecisionPolicy: bf16/int8
+    quantize the projection and the aggregate message stream only (the
+    documented int8 exclusion, docs/KERNELS.md)."""
+    src, dst = edge_endpoints(g)
+    n = x.shape[0]
+    h = x @ params["w"]["w"]                   # projection (policy width)
+    hf = h.astype(jnp.float32)
+    s_src = hf @ params["a_src"].astype(jnp.float32)
+    s_dst = hf @ params["a_dst"].astype(jnp.float32)
+    logits = _gather(s_src, src) + _gather(s_dst, dst)
+    if "a_edge" in params:
+        logits = logits + (g["edge_feat"].astype(jnp.float32)
+                           @ params["a_edge"]["w"].astype(
+                               jnp.float32))[:, 0]
+    logits = jax.nn.leaky_relu(logits, 0.2)
+    alpha = agg_mod.segment_softmax(logits, dst, n, g["valid_e"])
+    aggr = agg_mod.gather_aggregate("sum", h, src, dst, n, g["valid_e"],
+                                    alpha, precision=cfg.precision)
+    return linear(params["w_self"], x) + aggr.astype(x.dtype) \
+        + params["w"]["b"]
+
+
+register_conv("gcn", gcn_plan, gcn_apply, reorderable=True, resident=True,
+              partition_bitwise=True)
+register_conv("sage", sage_plan, sage_apply, reorderable=True,
+              resident=True)
+register_conv("gin", gin_plan, gin_apply)
+register_conv("pna", pna_plan, pna_apply)
+register_conv("gat", gat_plan, gat_apply, attention=True,
+              partition_bitwise=True)
 
 
 def conv_plan(cfg: ConvConfig, dtype=jnp.float32):
-    return PLANS[cfg.conv](cfg, dtype)
+    return conv_spec(cfg.conv).plan(cfg, dtype)
 
 
 def conv_apply(params, g, x, cfg: ConvConfig):
-    return APPLIES[cfg.conv](params, g, x, cfg)
+    return conv_spec(cfg.conv).apply(params, g, x, cfg)

@@ -17,6 +17,7 @@ import time
 
 import numpy as np
 
+from repro.core import convs as Cv
 from repro.core import gnn_model as G
 from repro.core import perf_model as PM
 from repro.core import quantization as Q
@@ -32,7 +33,10 @@ log_ = logging.getLogger(__name__)
 # analogue of the paper's parallelization factors, autotuned the same
 # way: sampled, synthesized, and predicted by the fitted models).
 SPACE = {
-    "conv": ["gcn", "gin", "pna", "sage"],
+    # conv axis: derived from the conv registry (convs.CONV_REGISTRY) —
+    # registering a conv with dse=True adds it here and to the
+    # perf-model conv one-hots without touching this module
+    "conv": None,           # filled by _rebuild_conv_axis below
     "gnn_hidden_dim": [64, 128, 256],
     "gnn_out_dim": [64, 128, 256],
     "gnn_layers": [1, 2, 3, 4],
@@ -76,6 +80,14 @@ SPACE = {
     # replicates whole graphs
     "partition": [1, 2, 4, 8],
 }
+
+
+def _rebuild_conv_axis():
+    SPACE["conv"] = [n for n in Cv.CONV_TYPES if Cv.conv_spec(n).dse]
+
+
+_rebuild_conv_axis()
+Cv.on_registry_change(_rebuild_conv_axis)
 
 
 def space_size() -> int:

@@ -57,7 +57,7 @@ class GNNModelConfig:
     gnn_hidden_dim: int = 64
     gnn_num_layers: int = 2
     gnn_output_dim: int = 64
-    gnn_conv: str = "gcn"                    # gcn | sage | gin | pna
+    gnn_conv: str = "gcn"           # any registered conv (convs.CONV_TYPES)
     gnn_activation: str = "relu"
     gnn_skip_connection: bool = True
     global_pooling: tuple = ("add", "mean", "max")

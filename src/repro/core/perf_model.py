@@ -12,8 +12,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.convs import (CONV_TYPES, ConvConfig, halo_comm_bytes,
-                              resolve_dataflow)
+from repro.core import convs as Cv
+from repro.core.convs import ConvConfig, halo_comm_bytes, resolve_dataflow
 from repro.core.quantization import BYTE_WIDTHS
 
 
@@ -158,7 +158,16 @@ def kfold_cv_mape(x, y, k: int = 5, seed: int = 0, **forest_kw) -> float:
 
 
 # ------------------------------------------------------------- features --
-FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
+def _dse_convs() -> list:
+    """Conv one-hot axis, derived from the conv registry: the convs the
+    DSE enumerates, in registration order. A legacy database recorded
+    before a conv existed featurizes with a zero in the new slot — its
+    designs simply never carried that name (e.g. pre-gat rows are
+    non-attention by construction; docs/DSE.md legacy-defaults table)."""
+    return [n for n in Cv.CONV_TYPES if Cv.conv_spec(n).dse]
+
+
+_TAIL_FEATURE_NAMES = [
     "gnn_hidden_dim", "gnn_out_dim", "gnn_layers", "skip",
     "mlp_hidden_dim", "mlp_layers",
     "gnn_p_in", "gnn_p_hidden", "gnn_p_out",
@@ -198,6 +207,19 @@ FEATURE_NAMES = [f"conv_{c}" for c in CONV_TYPES] + [
     "partition", "halo_comm_bytes",
 ]
 
+FEATURE_NAMES: list = []
+
+
+def _rebuild_feature_names():
+    # in-place so ``from perf_model import FEATURE_NAMES`` aliases stay
+    # live when a conv is (un)registered
+    FEATURE_NAMES[:] = [f"conv_{c}" for c in _dse_convs()] \
+        + _TAIL_FEATURE_NAMES
+
+
+_rebuild_feature_names()
+Cv.on_registry_change(_rebuild_feature_names)
+
 
 def _resolved_agg_width(design: dict) -> float:
     """Aggregation width of the final conv layer after the dataflow
@@ -220,7 +242,7 @@ def features(design: dict) -> np.ndarray:
     defaults to one device (zero one-hot), so databases recorded before
     the packed-batch / precision / sharding refactors still
     featurize."""
-    onehot = [1.0 if design["conv"] == c else 0.0 for c in CONV_TYPES]
+    onehot = [1.0 if design["conv"] == c else 0.0 for c in _dse_convs()]
     return np.array(onehot + [
         design["gnn_hidden_dim"], design["gnn_out_dim"],
         design["gnn_layers"], float(design["skip"]),

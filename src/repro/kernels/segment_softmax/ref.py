@@ -1,0 +1,33 @@
+"""Dense one-hot oracle for the segment-softmax kernel.
+
+Same contract as ``kernel.segment_softmax_pallas`` — (E,) logits +
+(E,) seg ids -> (E,) weights summing to 1 per non-empty segment, 0 on
+padding / -inf-masked / all-masked rows — computed the obviously-correct
+way: materialize the (num_segments, E) membership one-hot, subtract the
+per-segment masked max, exponentiate, normalize. O(S * E) memory, fine
+at test sizes; the equivalence tests pin the kernel against this.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+TINY = 1e-30
+
+
+def segment_softmax_ref(logits, seg_ids, num_segments: int):
+    e = logits.shape[0]
+    if e == 0 or num_segments == 0:
+        return jnp.zeros((e,), jnp.float32)
+    seg = jnp.asarray(seg_ids, jnp.int32)
+    seg = jnp.where((seg >= 0) & (seg < num_segments), seg, -1)
+    z = logits.astype(jnp.float32)
+    onehot = seg[None, :] == jnp.arange(num_segments)[:, None]  # (S, E)
+    masked = jnp.where(onehot, z[None, :], -jnp.inf)
+    m = masked.max(axis=1)                       # -inf on empty segments
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(onehot, jnp.exp(jnp.where(onehot, z[None, :], NEG_INF)
+                                  - m_safe[:, None]), 0.0)
+    denom = jnp.maximum(p.sum(axis=1, keepdims=True), TINY)
+    # segments are disjoint: summing the one-hot rows recovers per-edge
+    return (p / denom).sum(axis=0)

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
+from repro.core import convs as Cv
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm
 from repro.nn import param as prm
@@ -548,7 +549,7 @@ def main():
     ap.add_argument("--gnn", action="store_true",
                     help="serve packed GraphBatch GNN inference")
     ap.add_argument("--conv", default="gcn",
-                    choices=["gcn", "sage", "gin", "pna"])
+                    choices=list(Cv.CONV_TYPES))
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--oversize-requests", type=int, default=0,
                     help="append N giant graphs (~2x the node budget) to "

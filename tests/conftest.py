@@ -1,0 +1,55 @@
+"""Shared pytest configuration: the test-time budget check.
+
+CI runs tier-1 with ``PYTEST_TEST_BUDGET_S=60``: any test whose call
+phase runs longer than the budget fails the session with a listed
+offender, so slow tests are caught the day they land instead of when
+the suite becomes unbearable. Locally (no env var) the check is off
+and the driver's plain ``pytest -x -q`` behaves exactly as before.
+Tests with a legitimate reason to run long — the subprocess parity
+grids compile a full conv x precision x backend matrix twice — declare
+their own ceiling with ``@pytest.mark.budget(seconds)``.
+"""
+import os
+
+import pytest
+
+_BUDGET_ENV = "PYTEST_TEST_BUDGET_S"
+_violations = []
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "budget(seconds): per-test wall-clock ceiling overriding the "
+        f"{_BUDGET_ENV} default for tests that legitimately run long")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    yield
+    default = os.environ.get(_BUDGET_ENV)
+    if default is None or call.when != "call":
+        return
+    budget = float(default)
+    mark = item.get_closest_marker("budget")
+    if mark is not None:
+        budget = float(mark.args[0])
+    if call.duration > budget:
+        _violations.append((item.nodeid, call.duration, budget))
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not _violations:
+        return
+    terminalreporter.section("test-time budget violations")
+    for nodeid, duration, budget in _violations:
+        terminalreporter.write_line(
+            f"{nodeid}: {duration:.1f}s > {budget:.0f}s budget")
+    terminalreporter.write_line(
+        f"(raise a test's own ceiling with @pytest.mark.budget(seconds) "
+        f"or adjust {_BUDGET_ENV})")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _violations and exitstatus == 0:
+        session.exitstatus = 1

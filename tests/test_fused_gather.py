@@ -1,8 +1,9 @@
 """Fused gather->phi->aggregate pipeline: kernel == ref == materialized
 XLA across aggregations/shapes/scales, fused-vs-materialized parity for
-all four convs on packed batches (empty graphs, all-padding edge blocks,
-isolated nodes), dataflow planner resolution and override combinations,
-and the serve-path oversize fallback."""
+every registered conv x precision on packed batches (empty graphs,
+all-padding edge blocks, isolated nodes) via the shared tests/parity.py
+matrix, dataflow planner resolution and override combinations, and the
+serve-path oversize fallback."""
 import dataclasses
 
 import jax
@@ -10,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import parity
 from repro.core import aggregations as A
 from repro.core import convs as C
 from repro.core import gnn_model as G
@@ -159,22 +161,18 @@ def test_gather_aggregate_pallas_var_falls_back_to_materialized():
 
 
 # ------------------------------------------- conv-level fused parity ----
-@pytest.mark.parametrize("conv", C.CONV_TYPES)
-def test_fused_packed_matches_materialized(conv):
-    """apply_packed traced under the pallas backend (fused gather for
-    linear convs, segment kernel elsewhere) == the materialized XLA
-    trace, for every conv, on a batch holding an empty-edge graph and
-    all-padding tail edge blocks."""
-    cfg = _cfg(conv)
-    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
-    _, jb = _packed_batch()
-    with A.backend_scope("xla"):
-        ref = np.asarray(jax.jit(
-            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
-    with A.backend_scope("pallas", 32, 16):
-        got = np.asarray(jax.jit(
-            lambda p, b: G.apply_packed(p, cfg, b))(params, jb))
-    assert float(np.max(np.abs(got - ref))) < 1e-4, conv
+@pytest.mark.parametrize("conv,precision", parity.conv_precision_cases())
+def test_fused_packed_matches_materialized(conv, precision):
+    """The packed cell of the shared parity matrix: apply_packed traced
+    under the pallas backend (fused gather for linear convs, segment /
+    segment-softmax kernels elsewhere) == the materialized XLA trace
+    under one calibrated PrecisionPolicy, for every registered conv and
+    every precision its ConvSpec declares, on a batch holding an
+    empty-edge graph and all-padding tail edge blocks; fp32 also checks
+    the padded per-graph oracle."""
+    gs = [P.make_graph(DS, i) for i in range(5)]
+    gs.insert(2, _empty_edge_graph())
+    parity.check_packed(conv, precision, gs, DS)
 
 
 @pytest.mark.parametrize("conv", ["gcn", "sage"])

@@ -6,14 +6,11 @@ simulated host devices, oversize routing (every oversize request
 resolves to exactly one of partitioned / fallback / rejected), and the
 DSE ``partition`` axis plumbing."""
 import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
 
 import numpy as np
 import pytest
 
+import parity
 from repro.core import convs as Cv
 from repro.core import dse
 from repro.core import perf_model as PM
@@ -282,114 +279,18 @@ def test_legacy_design_featurizes_as_unpartitioned():
 
 # --------------------------------- parity (simulated host devices) ------
 # The device count must be pinned before jax initializes, so the grid
-# runs in one subprocess over 4 simulated host devices: every conv,
-# every precision, both aggregation backends, partitioned-vs-padded-
-# oracle. fp32 gcn is asserted *bitwise* (the serve-path acceptance
-# contract); everything else to a tight tolerance — pna fp32 reduces its
-# degree statistics in a different association order across devices
-# (~2e-6 at these widths), which bitwise would spuriously fail.
-PARITY_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core import gnn_model as G
-    from repro.data import pipeline as P
-    from repro.launch.mesh import make_data_mesh
-    from repro.nn import param as prm
-    from repro.core import aggregations as agg_mod
-
-    DS = P.GraphDataConfig(avg_nodes=40, avg_degree=2, node_feat_dim=7,
-                           edge_feat_dim=3, max_nodes=128, max_edges=192,
-                           seed=11)
-    g = P.make_graph(DS, 0)
-    part4 = P.partition_graph(g, 4, 64, 128)
-    stacked4 = G.stack_shards(part4.parts)
-    mesh4 = make_data_mesh(4)
-    el = {"node_feat": jnp.asarray(g.node_feat),
-          "edge_index": jnp.asarray(g.edge_index),
-          "edge_feat": jnp.asarray(g.edge_feat),
-          "num_nodes": jnp.int32(g.num_nodes)}
-
-    for conv in ("gcn", "sage", "gin", "pna"):
-        cfg = G.GNNModelConfig(
-            graph_input_feature_dim=7, graph_input_edge_dim=3,
-            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
-            gnn_conv=conv,
-            mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
-                                 hidden_layers=1))
-        params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
-        oracle = jax.jit(lambda p, e, c=cfg: G.apply(p, c, e))
-        ref32 = np.asarray(oracle(params, el))
-        cal_batch, _ = P.pack_graphs([g], 192, 384, 4)
-        for precision in ("fp32", "bf16", "int8"):
-            policy = G.calibrated_policy(
-                params, cfg, G.packed_to_device(cal_batch), precision)
-            for backend in ("xla", "pallas"):
-                with agg_mod.backend_scope(backend, 32, 32):
-                    fn = G.make_partitioned_apply(
-                        cfg, mesh4, None, policy,
-                        out_rows=part4.padded_nodes)
-                    out = np.asarray(fn(params, stacked4))
-                    single = jax.jit(lambda p, b, c=cfg, po=policy:
-                                     G.apply_packed(p, c, b, None, po))
-                    ref = np.asarray(single(
-                        params, G.packed_to_device(cal_batch)))[0]
-                    err = np.abs(out - ref).max()
-                    assert err < 1e-4, (conv, precision, backend, err)
-                    if precision == "fp32" and conv == "gcn":
-                        # bitwise vs the padded oracle built under the
-                        # SAME backend (the serve-path contract)
-                        refb = np.asarray(jax.jit(
-                            lambda p, e: G.apply(p, cfg, e))(params, el))
-                        assert np.array_equal(out, refb), \\
-                            (backend, np.abs(out - refb).max())
-        # degenerate: 1-part partition over a 1-device mesh is the
-        # padded program with an inert exchange — bitwise at fp32
-        part1 = P.partition_graph(g, 1, 128, 192)
-        out1 = np.asarray(G.apply_packed_partitioned(
-            params, cfg, part1, mesh=make_data_mesh(1)))
-        assert np.array_equal(out1, ref32), conv
-
-    # degenerate: disconnected components split cut-free -> the SPMD
-    # exchange runs with an all-padding halo and must be inert (gcn fp32)
-    nf = np.zeros((128, 7), np.float32)
-    nf[:8] = np.random.default_rng(1).normal(size=(8, 7)).astype(
-        np.float32)
-    ei = np.full((192, 2), -1, np.int32)
-    edges = [(i, i + 1) for i in range(3)] \\
-        + [(4 + i, 5 + i) for i in range(3)]
-    for i, (s, d) in enumerate(edges):
-        ei[i] = (s, d)
-    gd = P.Graph(node_feat=nf, edge_index=ei,
-                 edge_feat=np.zeros((192, 3), np.float32),
-                 num_nodes=8, num_edges=len(edges),
-                 y=np.zeros((1,), np.float32))
-    cfg = G.GNNModelConfig(
-        graph_input_feature_dim=7, graph_input_edge_dim=3,
-        gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
-        gnn_conv="gcn",
-        mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
-                             hidden_layers=1))
-    params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
-    pd = P.partition_graph(gd, 2, 16, 16)
-    assert pd.cut_edges == 0 and pd.halo_nodes == 0
-    out = np.asarray(G.apply_packed_partitioned(
-        params, cfg, pd, mesh=make_data_mesh(2)))
-    eld = {"node_feat": jnp.asarray(gd.node_feat),
-           "edge_index": jnp.asarray(gd.edge_index),
-           "edge_feat": jnp.asarray(gd.edge_feat),
-           "num_nodes": jnp.int32(gd.num_nodes)}
-    ref = np.asarray(jax.jit(lambda p, e: G.apply(p, cfg, e))(params, eld))
-    assert np.array_equal(out, ref)
-    print("PARTITIONED_PARITY_OK")
-""")
-
-
+# runs in one subprocess over 4 simulated host devices: every
+# registered conv, every precision its ConvSpec declares, both
+# aggregation backends, partitioned-vs-padded-oracle. Convs whose
+# ConvSpec sets partition_bitwise (gcn, and gat — per-destination edge
+# order survives the edge-cut, so the segment softmax and sum
+# accumulate in the padded program's order) are asserted *bitwise* at
+# fp32 (the serve-path acceptance contract); everything else to a
+# tight tolerance — pna fp32 reduces its degree statistics in a
+# different association order across devices (~2e-6 at these widths),
+# which bitwise would spuriously fail. The grid body lives in
+# tests/parity.py next to the packed and sharded cells of the matrix.
+@pytest.mark.budget(840)
 def test_partitioned_parity_grid_subprocess():
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert "PARTITIONED_PARITY_OK" in out.stdout, out.stderr[-3000:]
+    parity.run_parity_subprocess(parity.partitioned_parity_script(),
+                                 "PARTITIONED_PARITY_OK")

@@ -107,7 +107,10 @@ def test_feature_vector_shape():
     d = dse.sample_design(rng)
     f = PM.features(d)
     assert f.shape == (len(PM.FEATURE_NAMES),)
-    assert f[:4].sum() == 1.0    # one-hot conv type
+    # the conv one-hot block leads FEATURE_NAMES and is registry-sized
+    n_conv = sum(1 for n in PM.FEATURE_NAMES if n.startswith("conv_"))
+    assert all(n.startswith("conv_") for n in PM.FEATURE_NAMES[:n_conv])
+    assert f[:n_conv].sum() == 1.0    # one-hot conv type
 
 
 def test_design_space_size_and_config_build():

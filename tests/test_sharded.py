@@ -1,15 +1,12 @@
 """Data-parallel sharded packed inference: shard_pack partitioning
-invariants, sharded-vs-single-device parity over the conv x precision x
-backend grid on simulated host devices, host-order gather, uneven shard
-counts, and the num_shards DSE/feature plumbing."""
-import os
-import subprocess
-import sys
-import textwrap
-
+invariants, sharded-vs-single-device parity over the registry-derived
+conv x precision x backend grid (tests/parity.py) on simulated host
+devices, host-order gather, uneven shard counts, and the num_shards
+DSE/feature plumbing."""
 import numpy as np
 import pytest
 
+import parity
 from repro.core import dse
 from repro.core import perf_model as PM
 from repro.data import pipeline as P
@@ -164,82 +161,13 @@ def test_legacy_design_featurizes_as_single_device():
 
 # --------------------------------------- sharded parity (fake devices) --
 # The device count must be pinned before jax initializes, so the parity
-# grid runs in one subprocess over 2 simulated host devices: every conv,
-# every precision, both aggregation backends, plus an uneven wave (9
-# graphs over 2 shards) and a 4-shard wave with idle shards. Host order
-# is checked against the padded per-graph oracle.
-PARITY_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    import jax, jax.numpy as jnp, numpy as np
-    from repro.core import gnn_model as G
-    from repro.data import pipeline as P
-    from repro.launch.mesh import make_data_mesh
-    from repro.nn import param as prm
-    from repro.core import aggregations as agg_mod
-
-    DS = P.GraphDataConfig(avg_nodes=10, max_nodes=64, max_edges=64,
-                           node_feat_dim=7, edge_feat_dim=3, seed=5)
-    graphs = [P.make_graph(DS, i) for i in range(9)]   # uneven over 2
-
-    def el(g):
-        return {"node_feat": jnp.asarray(g.node_feat),
-                "edge_index": jnp.asarray(g.edge_index),
-                "edge_feat": jnp.asarray(g.edge_feat),
-                "num_nodes": jnp.int32(g.num_nodes)}
-
-    mesh2 = make_data_mesh(2)
-    for conv in ("gcn", "sage", "gin", "pna"):
-        cfg = G.GNNModelConfig(
-            graph_input_feature_dim=7, graph_input_edge_dim=3,
-            gnn_hidden_dim=8, gnn_num_layers=2, gnn_output_dim=8,
-            gnn_conv=conv,
-            mlp_head=G.MLPConfig(in_dim=24, out_dim=1, hidden_dim=8,
-                                 hidden_layers=1))
-        params = prm.materialize(G.model_plan(cfg), jax.random.key(0))
-        wave, k = P.shard_pack(graphs, 96, 192, 8, num_shards=2)
-        assert k == len(graphs)
-        stacked = G.stack_shards(wave)
-        cal_batch, _ = P.pack_graphs(graphs, 192, 384, 16)
-        for precision in ("fp32", "bf16", "int8"):
-            policy = G.calibrated_policy(
-                params, cfg, G.packed_to_device(cal_batch), precision)
-            for backend in ("xla", "pallas"):
-                with agg_mod.backend_scope(backend, 32, 32):
-                    fn = G.make_sharded_apply(cfg, mesh2, None, policy)
-                    out = np.asarray(fn(params, stacked))
-                    single = jax.jit(lambda p, b: G.apply_packed(
-                        p, cfg, b, None, policy))
-                    for s, shard in enumerate(wave.shards):
-                        ref = np.asarray(single(
-                            params, G.packed_to_device(shard)))
-                        err = np.abs(out[s] - ref).max()
-                        assert err < 1e-5, (conv, precision, backend, err)
-        # host-order gather vs the padded per-graph oracle (fp32)
-        fn = G.make_sharded_apply(cfg, mesh2)
-        host = P.gather_shard_outputs(np.asarray(fn(params, stacked)),
-                                      wave.index)
-        oracle = jax.jit(lambda p, e: G.apply(p, cfg, e))
-        for i, g in enumerate(graphs):
-            ref = np.asarray(oracle(params, el(g)))
-            assert np.abs(host[i] - ref).max() < 1e-4, (conv, i)
-        # 4-shard wave with idle shards: one graph, three empty blocks
-        wave4, k4 = P.shard_pack(graphs[:1], 96, 192, 8, num_shards=4)
-        assert k4 == 1
-        out4 = np.asarray(G.apply_packed_sharded(
-            params, cfg, wave4, mesh=make_data_mesh(4)))
-        host4 = P.gather_shard_outputs(out4, wave4.index)
-        ref = np.asarray(oracle(params, el(graphs[0])))
-        assert np.abs(host4[0] - ref).max() < 1e-4, conv
-    print("SHARDED_PARITY_OK")
-""")
-
-
+# grid runs in one subprocess over 2 simulated host devices: every
+# registered conv, every precision its ConvSpec declares, both
+# aggregation backends, plus an uneven wave (9 graphs over 2 shards)
+# and a 4-shard wave with idle shards. Host order is checked against
+# the padded per-graph oracle. The grid body lives in tests/parity.py
+# next to the packed and partitioned cells of the same matrix.
+@pytest.mark.budget(840)
 def test_sharded_parity_grid_subprocess():
-    env = dict(os.environ,
-               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
-                                       "src"))
-    env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert "SHARDED_PARITY_OK" in out.stdout, out.stderr[-3000:]
+    parity.run_parity_subprocess(parity.sharded_parity_script(),
+                                 "SHARDED_PARITY_OK")
